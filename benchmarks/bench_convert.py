@@ -1,0 +1,41 @@
+"""Paper §III-B: conversion (format-switch) cost through the COO proxy.
+
+The runtime cost of activate()/convert — the price of a format switch —
+relative to one SpMV in the target format (i.e. how many SpMVs a switch
+must win back; the paper's iterative solvers amortise over hundreds).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DynamicMatrix, Format, convert, hpcg, spmv
+
+
+def _time(fn, iters=5, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(jax.tree.leaves(fn())[0])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(jax.tree.leaves(fn())[0])
+    return (time.perf_counter() - t0) / iters
+
+
+def run(size=(16, 16, 16)):
+    rows = []
+    prob = hpcg.generate_problem(*size)
+    A = hpcg.to_coo(prob)
+    x = jnp.ones((prob.shape[0],), jnp.float32)
+    f = jax.jit(lambda a, v: spmv(a, v))
+    for fmt in (Format.CSR, Format.DIA, Format.ELL):
+        t_conv = _time(lambda fmt=fmt: convert(A, fmt))
+        Af = convert(A, fmt)
+        t_spmv = _time(lambda Af=Af: f(Af, x))
+        rows.append((f"convert_COO_to_{fmt.name}", t_conv * 1e6,
+                     f"spmvs_to_amortize={t_conv / max(t_spmv, 1e-9):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(c) for c in r))

@@ -1,0 +1,52 @@
+"""Paper Fig. 4: single-node format comparison on the HPCG matrix.
+
+SpMV runtime ratio of CSR (reference state) vs each candidate format over a
+set of problem sizes, plus what the auto-tuner picks. Paper's expectation:
+DIA wins on the regular stencil matrix except at small sizes; the ratio
+flips with size — the motivation for runtime switching.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DynamicMatrix, Format, autotune, convert, hpcg, spmv
+
+
+def _time(fn, *args, iters=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+FORMATS = (Format.COO, Format.CSR, Format.DIA, Format.ELL)
+
+
+def run(sizes=((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48))):
+    rows = []
+    f = jax.jit(lambda a, v: spmv(a, v))
+    for nx, ny, nz in sizes:
+        prob = hpcg.generate_problem(nx, ny, nz)
+        dm = DynamicMatrix(hpcg.to_coo(prob))
+        x = jnp.ones((prob.shape[0],), jnp.float32)
+        times = {}
+        for fmt in FORMATS:
+            times[fmt] = _time(f, dm.activate(fmt), x)
+        n = prob.shape[0]
+        ref = times[Format.CSR]
+        for fmt in FORMATS:
+            rows.append((f"format_{fmt.name}_n{n}", times[fmt] * 1e6,
+                         f"speedup_vs_csr={ref / times[fmt]:.2f}"))
+        best = min(times, key=times.get)
+        tuned = autotune(dm, mode="analytic").best
+        rows.append((f"format_best_n{n}", times[best] * 1e6,
+                     f"measured={best.name};analytic_pick={tuned.name}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(c) for c in r))

@@ -1,0 +1,48 @@
+"""Paper Fig. 3: dynamic-dispatch overhead.
+
+Compares SpMV via (a) the concrete CSR container directly, (b) DynamicMatrix
+with active state CSR (trace-time dispatch), (c) SwitchDynamicMatrix
+(lax.switch runtime dispatch). The paper's claim: the abstraction adds no
+significant overhead (ratio ~1). Repeated over HPCG per-core problem sizes.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DynamicMatrix, Format, SwitchDynamicMatrix, convert,
+                        hpcg, spmv)
+
+
+def _time(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(sizes=((8, 8, 8), (16, 16, 16), (24, 24, 24), (32, 32, 32))):
+    rows = []
+    f = jax.jit(lambda a, v: spmv(a, v))
+    for nx, ny, nz in sizes:
+        prob = hpcg.generate_problem(nx, ny, nz)
+        A = convert(hpcg.to_coo(prob), Format.CSR)
+        x = jnp.ones((prob.shape[0],), jnp.float32)
+        t_concrete = _time(f, A, x)
+        t_dynamic = _time(f, DynamicMatrix(A), x)
+        sw = SwitchDynamicMatrix.from_matrix(A, active=Format.CSR)
+        t_switch = _time(f, sw, x)
+        n = prob.shape[0]
+        rows.append((f"overhead_dynamic_n{n}", t_dynamic * 1e6,
+                     f"ratio={t_dynamic / t_concrete:.3f}"))
+        rows.append((f"overhead_switch_n{n}", t_switch * 1e6,
+                     f"ratio={t_switch / t_concrete:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(c) for c in r))

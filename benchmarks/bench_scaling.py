@@ -1,0 +1,67 @@
+"""Paper Fig. 5: multi-shard scaling of the distributed SpMV.
+
+Strong scaling (fixed global problem) over 1..8 simulated shards, for the
+paper's versions: reference (CSR/CSR), Morpheus (DIA local / CSR remote),
+Ghost (CSR local / COO remote) and Multi-Format (per-shard auto-tuned).
+Runs in subprocesses so each shard count gets its own device view.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import sys, time, json
+sys.path.insert(0, %(src)r)
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import Format, hpcg
+from repro.core.distributed import build_dist_matrix, dist_spmv, distribute_vector
+
+mesh = jax.make_mesh((%(ndev)d,), ("rows",))
+prob = hpcg.generate_problem(16, 16, 32)
+x = distribute_vector(np.ones(prob.shape[0], np.float32), mesh, "rows")
+out = {}
+for name, kw in [
+    ("reference", dict(local_format=Format.CSR, remote_format=Format.CSR)),
+    ("morpheus", dict(local_format=Format.DIA, remote_format=Format.CSR)),
+    ("ghost", dict(local_format=Format.CSR, remote_format=Format.COO)),
+    ("multiformat", dict(mode="multiformat")),
+]:
+    A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
+                          "rows", **kw)
+    f = jax.jit(lambda a, v: dist_spmv(a, v, mesh))
+    jax.block_until_ready(f(A, x))
+    t0 = time.perf_counter()
+    for _ in range(20):
+        jax.block_until_ready(f(A, x))
+    out[name] = (time.perf_counter() - t0) / 20
+print("RESULT " + json.dumps(out))
+"""
+
+
+def run(shards=(1, 2, 4, 8)):
+    rows = []
+    for ndev in shards:
+        script = SCRIPT % {"ndev": ndev, "src": os.path.abspath(SRC)}
+        res = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=900)
+        line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")]
+        if not line:
+            rows.append((f"scaling_p{ndev}_FAILED", 0.0, res.stderr[-200:]))
+            continue
+        times = json.loads(line[0][len("RESULT "):])
+        ref = times["reference"]
+        for name, t in times.items():
+            rows.append((f"scaling_{name}_p{ndev}", t * 1e6,
+                         f"speedup_vs_ref={ref / t:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(c) for c in r))

@@ -1,0 +1,53 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results/dryrun.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_experiments_md
+Writes the tables to results/generated_tables.md for inclusion.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import roofline as rl
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "generated_tables.md")
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = ["| arch | shape | status | HBM GiB/dev | lower s | compile s | "
+            "reported GFLOP/dev | collective GiB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(rl.RESULTS_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("mesh") != mesh or rec.get("tag"):
+            continue
+        if rec.get("skip"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | SKIP: {rec['skip'][:48]} "
+                        "| - | - | - | - | - |")
+            continue
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | compiled "
+            f"| {rec['bytes_per_device'] / 2**30:.1f} "
+            f"| {rec.get('lower_s', 0):.0f} | {rec.get('compile_s', 0):.0f} "
+            f"| {rec['cost_reported']['flops'] / 1e9:.0f} "
+            f"| {rec['collectives_reported'].get('total', 0) / 2**30:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    parts = ["## Generated tables (benchmarks/make_experiments_md.py)\n"]
+    parts.append("### Dry-run, single pod (16x16 = 256 chips)\n")
+    parts.append(dryrun_table("pod"))
+    parts.append("\n### Dry-run, multi-pod (2x16x16 = 512 chips)\n")
+    parts.append(dryrun_table("multipod"))
+    parts.append("\n### Roofline (single pod, corrected costs)\n")
+    parts.append(rl.table("pod"))
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

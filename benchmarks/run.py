@@ -1,0 +1,92 @@
+"""Benchmark harness (deliverable d): one family per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  bench_overhead   Fig. 3  dynamic-dispatch overhead vs concrete CSR
+  bench_formats    Fig. 4  single-node format comparison + autotuner pick
+  bench_scaling    Fig. 5  multi-shard strong scaling (4 Morpheus versions)
+  bench_convert    §III-B  conversion (format-switch) amortisation
+  bench_kernels    —       Pallas kernels (interpret) vs pure-jnp reference
+  roofline         —       dry-run roofline table (if results are present)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+"""
+import argparse
+import sys
+import time
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import Format, banded_coo, convert, random_coo
+    from repro.core.ops import spmv as core_spmv, spmm as core_spmm
+    from repro.kernels import ops as kops
+
+    def _t(fn, *a, iters=10, warmup=2):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*a))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*a))
+        return (time.perf_counter() - t0) / iters
+
+    rows = []
+    A = convert(banded_coo((4096, 4096), [-64, -1, 0, 1, 64]), Format.DIA)
+    x = jnp.ones((4096,), jnp.float32)
+    rows.append(("kernel_dia_spmv_interp", _t(lambda: kops.dia_spmv(A, x)) * 1e6,
+                 f"ref_us={_t(jax.jit(lambda a, v: core_spmv(a, v)), A, x) * 1e6:.0f}"))
+    Ae = convert(random_coo(0, (4096, 4096), 0.01), Format.ELL)
+    rows.append(("kernel_ell_spmv_interp", _t(lambda: kops.ell_spmv(Ae, x)) * 1e6,
+                 f"ref_us={_t(jax.jit(lambda a, v: core_spmv(a, v)), Ae, x) * 1e6:.0f}"))
+    Ab = convert(random_coo(1, (1024, 1024), 0.1), Format.BSR, block_size=128)
+    B = jnp.ones((1024, 128), jnp.float32)
+    rows.append(("kernel_bsr_spmm_interp", _t(lambda: kops.bsr_spmm(Ab, B)) * 1e6,
+                 f"ref_us={_t(jax.jit(lambda a, b: core_spmm(a, b)), Ab, B) * 1e6:.0f}"))
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="")
+    p.add_argument("--quick", action="store_true",
+                   help="smaller sizes / fewer shard counts")
+    args = p.parse_args(argv)
+
+    from benchmarks import bench_convert, bench_formats, bench_overhead, bench_scaling
+
+    suites = {
+        "overhead": lambda: bench_overhead.run(
+            sizes=((8, 8, 8), (16, 16, 16)) if args.quick else
+            ((8, 8, 8), (16, 16, 16), (24, 24, 24), (32, 32, 32))),
+        "formats": lambda: bench_formats.run(
+            sizes=((8, 8, 8), (16, 16, 16)) if args.quick else
+            ((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48))),
+        "convert": bench_convert.run,
+        "kernels": bench_kernels,
+        "scaling": lambda: bench_scaling.run((1, 2, 4) if args.quick else (1, 2, 4, 8)),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            for r in fn():
+                print(",".join(str(c) for c in r))
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,{e!r}")
+
+    # roofline table pointer (if the dry-run has produced results)
+    if not args.only or args.only == "roofline":
+        try:
+            from benchmarks import roofline
+            cells = roofline.load_cells("pod")
+            if cells:
+                print(f"roofline_cells_available,{len(cells)},see EXPERIMENTS.md")
+        except Exception as e:  # noqa: BLE001
+            print(f"roofline_FAILED,0,{e!r}")
+
+
+if __name__ == "__main__":
+    main()

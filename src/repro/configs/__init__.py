@@ -1,0 +1,3 @@
+"""Architecture configs (--arch <id>) + assigned shape cells."""
+from repro.configs.registry import ALIASES, ARCH_IDS, ArchConfig, get_config, list_archs
+from repro.configs.shapes import SHAPES, input_specs, skip_reason

@@ -1,0 +1,29 @@
+"""repro.core — Morpheus-JAX: dynamic sparse matrices (the paper's library).
+
+Public API:
+    Format, COO, CSR, DIA, ELL, BSR, Dense      containers
+    convert, to_coo                             format conversion (COO proxy)
+    DynamicMatrix, SwitchDynamicMatrix          dynamic abstractions
+    spmv, spmm, dot, waxpby, axpy, norm2        algorithms
+    autotune                                    per-matrix/shard format tuner
+"""
+from repro.core.autotune import PatternStats, TuneReport, analytic_select, autotune, profile_select
+from repro.core.convert import convert, to_coo
+from repro.core.dynamic import DEFAULT_CANDIDATES, DynamicMatrix, SwitchDynamicMatrix
+from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
+                                banded_coo, bytes_of, coo_from_arrays,
+                                coo_from_dense_np, deep_copy, dense_from_array,
+                                random_coo, shallow_copy, to_dense_np)
+from repro.core.ops import (assign, axpy, dot, extract_diagonal, norm2,
+                            reduction, spmm, spmv, update_diagonal, waxpby)
+
+__all__ = [
+    "Format", "COO", "CSR", "DIA", "ELL", "BSR", "Dense", "HYB",
+    "convert", "to_coo", "DynamicMatrix", "SwitchDynamicMatrix",
+    "DEFAULT_CANDIDATES", "spmv", "spmm", "dot", "waxpby", "axpy", "norm2",
+    "assign", "reduction", "extract_diagonal", "update_diagonal",
+    "autotune", "profile_select", "analytic_select", "TuneReport",
+    "PatternStats", "banded_coo", "random_coo", "coo_from_arrays",
+    "coo_from_dense_np", "dense_from_array", "to_dense_np", "bytes_of",
+    "shallow_copy", "deep_copy",
+]

@@ -1,0 +1,281 @@
+"""Format conversions (paper §III-B "Convert" copy concept).
+
+Architecture: the classic sparse-library *symbolic/numeric* split, which is
+also the honest TPU adaptation of the paper's element-wise convert:
+
+  * symbolic phase (host, numpy): analyse the sparsity *pattern* and produce
+    static capacities / offset tables / block structure;
+  * numeric phase (device, jit-able): pure gather/scatter of values into the
+    target layout.
+
+As in the paper, COO acts as the proxy format: any -> COO -> any. Fast paths
+exist where they fall out naturally (CSR<->COO order-preserving, ELL->COO).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
+                                coo_from_arrays)
+
+# ---------------------------------------------------------------------------
+# any -> COO (device-friendly where the source layout permits)
+# ---------------------------------------------------------------------------
+
+
+def csr_to_coo(A: CSR) -> COO:
+    """CSR -> COO. jit-able: recover row ids from the row-pointer array."""
+    cap = A.capacity
+    k = jnp.arange(cap, dtype=jnp.int32)
+    rows = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
+    rows = jnp.clip(rows, 0, A.shape[0] - 1)  # padded tail -> row 0-ish, val 0
+    return COO(rows, A.indices, A.data, A.shape, A.nnz)
+
+
+def ell_to_coo(A: ELL) -> COO:
+    """ELL -> COO. jit-able flatten; padding entries stay (0-valued)."""
+    m, k = A.data.shape
+    rows = jnp.repeat(jnp.arange(m, dtype=jnp.int32), k)
+    return COO(rows, A.cols.reshape(-1), A.data.reshape(-1), A.shape, A.nnz)
+
+
+def dia_to_coo(A: DIA) -> COO:
+    """DIA -> COO. jit-able; out-of-matrix diagonal tails become padding."""
+    m, n = A.shape
+    nd = A.ndiag
+    i = jnp.arange(m, dtype=jnp.int32)[None, :]  # (1, M)
+    offs = A.offsets[:, None].astype(jnp.int32)  # (nd, 1)
+    cols = i + offs
+    valid = (cols >= 0) & (cols < n)
+    rows = jnp.broadcast_to(i, (nd, m))
+    data = jnp.where(valid, A.data, 0)
+    rows = jnp.where(valid, rows, 0)
+    cols = jnp.where(valid, cols, 0)
+    return COO(rows.reshape(-1), cols.reshape(-1), data.reshape(-1), A.shape, A.nnz)
+
+
+def bsr_to_coo(A: BSR) -> COO:
+    """BSR -> COO. jit-able block expansion."""
+    bs = A.block_size
+    nblk = A.nblocks
+    k = jnp.arange(nblk, dtype=jnp.int32)
+    brow = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
+    brow = jnp.clip(brow, 0, A.shape[0] // bs - 1)
+    bi = jnp.arange(bs, dtype=jnp.int32)
+    rows = (brow[:, None, None] * bs + bi[None, :, None])
+    cols = (A.indices[:, None, None] * bs + bi[None, None, :])
+    rows = jnp.broadcast_to(rows, (nblk, bs, bs)).reshape(-1)
+    cols = jnp.broadcast_to(cols, (nblk, bs, bs)).reshape(-1)
+    return COO(rows, cols, A.data.reshape(-1), A.shape, A.nnz)
+
+
+def hyb_to_coo(A: HYB) -> COO:
+    """HYB -> COO. jit-able: concatenate the parts' COO views."""
+    e = ell_to_coo(A.ell)
+    c = A.coo
+    return COO(jnp.concatenate([e.row, c.row]), jnp.concatenate([e.col, c.col]),
+               jnp.concatenate([e.data, c.data]), A.shape, A.nnz)
+
+
+def coo_to_hyb(A: COO, k: Optional[int] = None) -> HYB:
+    """COO -> HYB. Symbolic: split each row at k entries (host); numeric:
+    jit-able scatters into the two parts. Default k = median row length."""
+    m, n = A.shape
+    r = np.asarray(A.row)
+    d = np.asarray(A.data)
+    live = d != 0
+    counts = np.bincount(r[live], minlength=m) if live.any() else np.zeros(m, int)
+    if k is None:
+        k = max(1, int(np.median(counts[counts > 0])) if (counts > 0).any() else 1)
+    # rank of each entry within its row (host, by first-seen order)
+    order = np.argsort(r, kind="stable")
+    rank = np.zeros(len(r), np.int64)
+    seen = {}
+    for pos in order:
+        rr = r[pos]
+        rank[pos] = seen.get(rr, 0)
+        seen[rr] = rank[pos] + 1
+    in_ell = (rank < k) & live
+    in_coo = (~in_ell) & live
+    ell = coo_to_ell(COO(A.row, A.col, jnp.where(jnp.asarray(in_ell), A.data, 0),
+                         A.shape, A.nnz), k=k)
+    coo_cap = max(1, int(in_coo.sum()))
+    idx = np.nonzero(in_coo)[0]
+    pad = np.zeros(coo_cap - len(idx), np.int64)
+    sel = jnp.asarray(np.concatenate([idx, pad]).astype(np.int32))
+    mask = jnp.asarray(np.concatenate([np.ones(len(idx)), np.zeros(len(pad))]).astype(bool))
+    coo = COO(jnp.where(mask, A.row[sel], 0), jnp.where(mask, A.col[sel], 0),
+              jnp.where(mask, A.data[sel], 0), A.shape, coo_cap)
+    return HYB(ell, coo, A.shape, A.nnz)
+
+
+def dense_to_coo(A: Dense, capacity: Optional[int] = None) -> COO:
+    """Dense -> COO. Host symbolic (nonzero is data-dependent)."""
+    a = np.asarray(A.data)
+    r, c = np.nonzero(a)
+    return coo_from_arrays(r, c, a[r, c], A.shape, capacity, a.dtype)
+
+
+def to_coo(A, capacity: Optional[int] = None) -> COO:
+    if isinstance(A, COO):
+        return A
+    if isinstance(A, CSR):
+        return csr_to_coo(A)
+    if isinstance(A, ELL):
+        return ell_to_coo(A)
+    if isinstance(A, DIA):
+        return dia_to_coo(A)
+    if isinstance(A, BSR):
+        return bsr_to_coo(A)
+    if isinstance(A, HYB):
+        return hyb_to_coo(A)
+    if isinstance(A, Dense):
+        return dense_to_coo(A, capacity)
+    raise TypeError(f"not a sparse container: {type(A)}")
+
+
+# ---------------------------------------------------------------------------
+# COO -> any
+# ---------------------------------------------------------------------------
+
+
+def _coo_host(A: COO):
+    """Pull the (tiny) index pattern to host for the symbolic phase."""
+    return np.asarray(A.row), np.asarray(A.col), np.asarray(A.data)
+
+
+def coo_to_csr(A: COO) -> CSR:
+    """COO -> CSR. jit-able: stable sort by row, bincount row pointers.
+
+    Padding entries (row 0, val 0) sort to the front of row 0 — harmless.
+    """
+    m = A.shape[0]
+    order = jnp.argsort(A.row, stable=True)
+    rows = A.row[order]
+    counts = jnp.bincount(rows, length=m)
+    indptr = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
+    return CSR(indptr, A.col[order], A.data[order], A.shape, A.nnz)
+
+
+def coo_to_ell(A: COO, k: Optional[int] = None) -> ELL:
+    """COO -> ELL. Symbolic: max row length K (host unless given); numeric:
+    jit-able scatter into the (M, K) planes."""
+    m = A.shape[0]
+    if k is None:
+        r, _, d = _coo_host(A)
+        live = np.asarray(d) != 0
+        k = int(np.bincount(r[live], minlength=m).max()) if live.any() else 1
+        k = max(k, 1)
+    order = jnp.argsort(A.row, stable=True)
+    rows, cols, data = A.row[order], A.col[order], A.data[order]
+    # slot within row = position - start of row
+    counts = jnp.bincount(rows, length=m)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])[:-1]
+    slot = jnp.arange(rows.shape[0], dtype=jnp.int32) - starts[rows]
+    # zero-valued (padding) entries all map to row 0; push them out of range.
+    # ELL padding sentinel is col=-1 (gathers clip to 0, data=0 keeps it
+    # inert; -1 can never collide with a real diagonal position).
+    dead = data == 0
+    slot = jnp.where(dead, k, slot)  # row-0 overflow guard, dropped below
+    cols_plane = jnp.full((m, k + 1), -1, jnp.int32).at[rows, jnp.clip(slot, 0, k)].set(jnp.where(dead, -1, cols))
+    data_plane = jnp.zeros((m, k + 1), A.dtype).at[rows, jnp.clip(slot, 0, k)].add(jnp.where(dead, 0, data))
+    return ELL(cols_plane[:, :k], data_plane[:, :k], A.shape, A.nnz)
+
+
+def coo_to_dia(A: COO, offsets: Optional[Sequence[int]] = None) -> DIA:
+    """COO -> DIA. Symbolic: the set of occupied diagonals (host unless
+    given); numeric: jit-able scatter into the (ndiag, M) table."""
+    m, n = A.shape
+    if offsets is None:
+        r, c, d = _coo_host(A)
+        live = np.asarray(d) != 0
+        offs = np.unique((c - r)[live]) if live.any() else np.array([0])
+        offsets = offs.astype(np.int64)
+    offsets_arr = jnp.asarray(np.asarray(offsets, np.int32))
+    nd = int(offsets_arr.shape[0])
+    k = (A.col - A.row).astype(jnp.int32)
+    slot = jnp.searchsorted(offsets_arr, k).astype(jnp.int32)
+    slot = jnp.clip(slot, 0, nd - 1)
+    hit = offsets_arr[slot] == k  # entries on non-listed diagonals are dropped
+    data = jnp.zeros((nd, m), A.dtype).at[slot, A.row].add(jnp.where(hit, A.data, 0))
+    return DIA(offsets_arr, data, A.shape, A.nnz)
+
+
+def coo_to_bsr(A: COO, block_size: int = 128, plan=None) -> BSR:
+    """COO -> BSR. Symbolic: block structure on host; numeric: jit scatter."""
+    m, n = A.shape
+    bs = block_size
+    if m % bs or n % bs:
+        raise ValueError(f"shape {A.shape} not a multiple of block size {bs}")
+    if plan is None:
+        r, c, d = _coo_host(A)
+        live = np.asarray(d) != 0
+        br, bc = r[live] // bs, c[live] // bs
+        blk = np.unique(br.astype(np.int64) * (n // bs) + bc)
+        pbr, pbc = blk // (n // bs), blk % (n // bs)
+        indptr = np.zeros(m // bs + 1, np.int32)
+        np.add.at(indptr, pbr + 1, 1)
+        indptr = np.cumsum(indptr).astype(np.int32)
+        plan = (indptr, pbc.astype(np.int32), blk)
+    indptr_np, bcol_np, blk_np = plan
+    nblk = max(1, len(bcol_np))
+    # host map: global block id -> slot
+    blk_sorted = np.asarray(blk_np, np.int64)
+    if blk_sorted.size and blk_sorted.max() >= np.iinfo(np.int32).max:
+        raise ValueError("block grid too large for int32 block ids")
+    blk_lut = jnp.asarray(blk_sorted.astype(np.int32))
+    gid = (A.row // bs) * (n // bs) + A.col // bs
+    slot = jnp.searchsorted(blk_lut, gid).astype(jnp.int32)
+    slot = jnp.clip(slot, 0, nblk - 1)
+    hit = blk_lut[slot] == gid
+    bi = (A.row % bs).astype(jnp.int32)
+    bj = (A.col % bs).astype(jnp.int32)
+    data = jnp.zeros((nblk, bs, bs), A.dtype).at[slot, bi, bj].add(jnp.where(hit, A.data, 0))
+    indptr = jnp.asarray(indptr_np if len(bcol_np) else np.zeros(m // bs + 1, np.int32))
+    bcol = jnp.asarray(bcol_np if len(bcol_np) else np.zeros(1, np.int32))
+    return BSR(indptr, bcol, data, A.shape, A.nnz, bs)
+
+
+def coo_to_dense(A: COO) -> Dense:
+    """COO -> Dense. jit-able scatter-add."""
+    m, n = A.shape
+    out = jnp.zeros((m, n), A.dtype).at[A.row, A.col].add(A.data)
+    return Dense(out, A.shape, A.nnz)
+
+
+# ---------------------------------------------------------------------------
+# The paper's convert(): any -> any via the COO proxy
+# ---------------------------------------------------------------------------
+
+
+def convert(A, fmt: Format, **kwargs):
+    """Element-wise conversion between any two formats via the COO proxy.
+
+    ``kwargs`` forward symbolic hints (``k=`` for ELL, ``offsets=`` for DIA,
+    ``block_size=`` for BSR, ``capacity=`` for COO) so the call can be made
+    fully jit-able when the plan is known.
+    """
+    fmt = Format(fmt)
+    if getattr(A, "format", None) == fmt and not kwargs:
+        return A
+    C = to_coo(A, capacity=kwargs.pop("capacity", None))
+    if fmt == Format.COO:
+        return C
+    if fmt == Format.CSR:
+        return coo_to_csr(C)
+    if fmt == Format.ELL:
+        return coo_to_ell(C, k=kwargs.get("k"))
+    if fmt == Format.DIA:
+        return coo_to_dia(C, offsets=kwargs.get("offsets"))
+    if fmt == Format.BSR:
+        return coo_to_bsr(C, block_size=kwargs.get("block_size", 128), plan=kwargs.get("plan"))
+    if fmt == Format.HYB:
+        return coo_to_hyb(C, k=kwargs.get("k"))
+    if fmt == Format.DENSE:
+        return coo_to_dense(C)
+    raise ValueError(f"unknown format {fmt}")

@@ -1,0 +1,348 @@
+"""Distributed dynamic sparse matrices (paper §V-E, DESIGN.md §5).
+
+The paper's MPI design, mapped to JAX SPMD:
+
+  * the global matrix is row-partitioned into P contiguous slabs, one per
+    shard of a (possibly multi-axis) mesh partition;
+  * each shard's rows split into a **local** square block (columns it owns —
+    the regular part) and a **remote** rectangular block (columns owned by
+    neighbours — the irregular part), each an independently-formatted
+    dynamic matrix (the paper's key distributed observation);
+  * SpMV = local SpMV + remote SpMV over halo values obtained by
+    ``ExchangeHalo`` — here a ``ppermute`` neighbour exchange (slab
+    partitions: stencil matrices) or an ``all_gather`` (general fallback);
+  * per-shard format selection ("Multi-Format") uses ``SwitchDynamicMatrix``:
+    one SPMD program, ``lax.switch`` on a per-shard format id.
+
+Containers are *stacked*: every array gains a leading P axis which is
+sharded over the mesh partition axes; inside ``shard_map`` each shard sees
+its own slab (leading dim 1) and unstacks it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.autotune import autotune as _autotune_fn
+from repro.core.convert import convert as _convert_fn
+from repro.core import ops as _ops
+from repro.core.dynamic import DynamicMatrix, SwitchDynamicMatrix
+from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format,
+                                coo_from_arrays)
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# Stacking / unstacking shard containers
+# ---------------------------------------------------------------------------
+
+
+def stack_parts(parts: Sequence):
+    """Stack P same-structure containers into one with a leading P axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+
+
+def _unstack(part):
+    """Inside shard_map: strip the leading (length-1) shard axis."""
+    return jax.tree.map(lambda a: a[0], part)
+
+
+def _pad_coo(A: COO, capacity: int) -> COO:
+    pad = capacity - A.capacity
+    if pad <= 0:
+        return A
+    z = lambda a: jnp.pad(a, (0, pad))
+    return COO(z(A.row), z(A.col), z(A.data), A.shape, A.nnz)
+
+
+def uniform_capacity(parts: Sequence[COO]) -> Sequence[COO]:
+    cap = max(p.capacity for p in parts)
+    return [_pad_coo(p, cap) for p in parts]
+
+
+# ---------------------------------------------------------------------------
+# The distributed container
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class DistSparseMatrix:
+    """Row-partitioned sparse matrix with local/remote split per shard.
+
+    ``local``/``remote`` are stacked containers (or stacked
+    SwitchDynamicMatrix for Multi-Format). ``halo_mode`` is ``"neighbor"``
+    (remote columns renumbered into a [prev_tail | next_head] halo of width
+    ``hw`` per side) or ``"gather"`` (remote columns are global ids).
+    """
+
+    def __init__(self, local, remote, *, nshards: int, mp: int, shape,
+                 axis: AxisNames, halo_mode: str, hw: int):
+        self.local = local
+        self.remote = remote
+        self.nshards = nshards
+        self.mp = mp
+        self.shape = tuple(shape)
+        self.axis = axis
+        self.halo_mode = halo_mode
+        self.hw = hw
+
+    def tree_flatten(self):
+        meta = (self.nshards, self.mp, self.shape, self.axis, self.halo_mode, self.hw)
+        return (self.local, self.remote), meta
+
+    @classmethod
+    def tree_unflatten(cls, meta, children):
+        nshards, mp, shape, axis, halo_mode, hw = meta
+        return cls(children[0], children[1], nshards=nshards, mp=mp,
+                   shape=shape, axis=axis, halo_mode=halo_mode, hw=hw)
+
+    def __repr__(self):
+        lf = type(self.local).__name__
+        rf = type(self.remote).__name__
+        return (f"DistSparseMatrix(shape={self.shape}, P={self.nshards}, "
+                f"local={lf}, remote={rf}, halo={self.halo_mode}:{self.hw})")
+
+
+# ---------------------------------------------------------------------------
+# Halo exchange (the paper's ExchangeHalo)
+# ---------------------------------------------------------------------------
+
+
+def _exchange_neighbor(x_blk, hw: int, axis: AxisNames, nshards: int):
+    """[prev shard's last hw | next shard's first hw] via ppermute."""
+    fwd = [(i, i + 1) for i in range(nshards - 1)]
+    bwd = [(i + 1, i) for i in range(nshards - 1)]
+    prev_tail = jax.lax.ppermute(x_blk[-hw:], axis, fwd)   # from p-1
+    next_head = jax.lax.ppermute(x_blk[:hw], axis, bwd)    # from p+1
+    return jnp.concatenate([prev_tail, next_head])
+
+
+def _shard_spmv(local, remote, x_blk, hw: int, axis: AxisNames, nshards: int,
+                halo_mode: str, backend: str):
+    """Per-shard SpMV body: y = A_local x_local + A_remote x_halo."""
+    y = _ops.spmv(local, x_blk, backend=backend)
+    if halo_mode == "neighbor":
+        halo = _exchange_neighbor(x_blk, hw, axis, nshards)
+    elif halo_mode == "gather":
+        halo = jax.lax.all_gather(x_blk, axis, tiled=True)
+    else:
+        raise ValueError(halo_mode)
+    return y + _ops.spmv(remote, halo, backend=backend)
+
+
+def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "ref"):
+    """Global SpMV. ``x`` is the global vector sharded P(axis)."""
+    axis = A.axis
+    part_spec = lambda t: jax.tree.map(lambda a: P(axis, *(None,) * (a.ndim - 1)), t)
+
+    def body(local_s, remote_s, x_blk):
+        return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,
+                           A.hw, axis, A.nshards, A.halo_mode, backend)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(part_spec(A.local), part_spec(A.remote), P(axis)),
+        out_specs=P(axis))
+    return fn(A.local, A.remote, x)
+
+
+def distribute_vector(x, mesh: Mesh, axis: AxisNames):
+    return jax.device_put(jnp.asarray(x), NamedSharding(mesh, P(axis)))
+
+
+# ---------------------------------------------------------------------------
+# Partitioner (host, setup phase — the paper's problem-setup analogue)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PartitionedCOO:
+    """Host-side per-shard COO triplets (intermediate symbolic product)."""
+
+    local: list  # [(row, col, val)] per shard, columns shard-local
+    remote: list  # [(row, col, val)] per shard, columns halo-renumbered
+    mp: int
+    hw: int
+    halo_mode: str
+    shape: Tuple[int, int]
+
+
+def partition_coo(row, col, val, shape, nshards: int,
+                  halo_mode: str = "auto") -> PartitionedCOO:
+    """Split global COO triplets into per-shard local/remote parts.
+
+    Rows are divided into ``nshards`` equal slabs (M must divide evenly; pad
+    upstream with identity rows otherwise). The halo mode is chosen
+    automatically: ``neighbor`` when every remote column lies within one
+    slab-width of the owning slab (stencil matrices), else ``gather``.
+    """
+    m, n = shape
+    if m % nshards or m != n:
+        raise ValueError(f"square matrix with M % P == 0 required, got {shape} / {nshards}")
+    mp = m // nshards
+    row = np.asarray(row, np.int64)
+    col = np.asarray(col, np.int64)
+    val = np.asarray(val)
+
+    shard = row // mp
+    local_mask = (col // mp) == shard
+    # maximum reach of remote columns beyond slab boundaries
+    reach_lo = np.where(~local_mask, shard * mp - col, 0).max(initial=0)
+    reach_hi = np.where(~local_mask, col - ((shard + 1) * mp - 1), 0).max(initial=0)
+    reach = int(max(reach_lo, reach_hi))
+    if halo_mode == "auto":
+        halo_mode = "neighbor" if 0 < reach <= mp else ("neighbor" if reach == 0 else "gather")
+    hw = max(1, int(reach)) if halo_mode == "neighbor" else mp
+
+    locals_, remotes = [], []
+    for p in range(nshards):
+        in_shard = shard == p
+        lm = in_shard & local_mask
+        rm = in_shard & ~local_mask
+        lr, lc, lv = row[lm] - p * mp, col[lm] - p * mp, val[lm]
+        rr = row[rm] - p * mp
+        if halo_mode == "neighbor":
+            gc = col[rm]
+            start, end = p * mp, (p + 1) * mp
+            below = gc < start
+            rc = np.where(below, gc - (start - hw), hw + (gc - end))
+            if rm.any() and ((rc < 0).any() or (rc >= 2 * hw).any()):
+                raise ValueError("neighbor halo violated; use halo_mode='gather'")
+        else:
+            rc = col[rm]
+        locals_.append((lr, lc, lv))
+        remotes.append((rr, rc, val[rm]))
+    return PartitionedCOO(locals_, remotes, mp, hw, halo_mode, shape)
+
+
+def _shard_coos(parts, shape, dtype):
+    """Uniform-capacity COO containers from per-shard triplets.
+
+    Static metadata (capacity AND logical nnz) must match across shards so
+    the containers stack into one pytree; nnz is set to the shared capacity
+    (zero-padding keeps the extra entries inert).
+    """
+    cap = max(1, max(len(t[0]) for t in parts))
+    coos = [coo_from_arrays(r, c, v, shape, capacity=cap, dtype=dtype)
+            for (r, c, v) in parts]
+    return [dataclasses.replace(c, nnz=cap) for c in coos]
+
+
+def _convert_uniform(coos, fmt: Format, **kw):
+    """Convert shard COOs to ``fmt`` with *uniform* static metadata so the
+    results can be stacked (shared ELL width / DIA offset count / etc.)."""
+    if fmt == Format.ELL:
+        k = kw.get("k")
+        if k is None:
+            k = 1
+            for c in coos:
+                r = np.asarray(c.row)[np.asarray(c.data) != 0]
+                if r.size:
+                    k = max(k, int(np.bincount(r, minlength=c.shape[0]).max()))
+        return [_convert_fn(c, fmt, k=k) for c in coos]
+    if fmt == Format.DIA:
+        # per-shard offsets padded to a common count (offset 0, zero data)
+        offs = []
+        for c in coos:
+            live = np.asarray(c.data) != 0
+            o = np.unique((np.asarray(c.col, np.int64) - np.asarray(c.row, np.int64))[live])
+            offs.append(o if o.size else np.zeros(1, np.int64))
+        nd = max(o.size for o in offs)
+        out = []
+        for c, o in zip(coos, offs):
+            o = np.concatenate([o, np.full(nd - o.size, o[-1] if o.size else 0)])
+            out.append(_convert_fn(c, fmt, offsets=np.sort(o)))
+        return out
+    return [_convert_fn(c, fmt, **kw) for c in coos]
+
+
+def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
+                      local_format: Format = Format.CSR,
+                      remote_format: Format = Format.CSR,
+                      mode: str = "uniform",
+                      candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
+                      tune: str = "calibrated",
+                      halo_mode: str = "auto",
+                      dtype=jnp.float32) -> DistSparseMatrix:
+    """Build a distributed dynamic matrix (the paper's three versions).
+
+    mode='uniform'      local/remote formats fixed (Morpheus & Ghost configs)
+    mode='multiformat'  per-shard formats chosen by the auto-tuner, dispatched
+                        via SwitchDynamicMatrix (paper's Multi-Format).
+    """
+    sizes = mesh.shape
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    nshards = int(np.prod([sizes[a] for a in names]))
+    axis = names if len(names) > 1 else names[0]
+
+    pc = partition_coo(row, col, val, shape, nshards, halo_mode=halo_mode)
+    lshape = (pc.mp, pc.mp)
+    rshape = (pc.mp, 2 * pc.hw if pc.halo_mode == "neighbor" else shape[1])
+    lcoos = _shard_coos(pc.local, lshape, dtype)
+    rcoos = _shard_coos(pc.remote, rshape, dtype)
+
+    if mode == "uniform":
+        local = stack_parts(_convert_uniform(lcoos, Format(local_format)))
+        remote = stack_parts(_convert_uniform(rcoos, Format(remote_format)))
+    elif mode == "multiformat":
+        # per-shard selection, paper §V-E (profiling) / DESIGN §2 (analytic)
+        def select(coos):
+            ids = []
+            for c in coos:
+                if tune == "analytic":
+                    rep = _autotune_fn(c, mode="analytic", candidates=candidates)
+                else:
+                    xs = jnp.ones((c.shape[1],), dtype)
+                    rep = _autotune_fn(c, xs, mode="profile",
+                                             candidates=candidates, iters=3)
+                ids.append(list(candidates).index(rep.best))
+            return np.asarray(ids, np.int32)
+
+        lids, rids = select(lcoos), select(rcoos)
+        lvars = [stack_parts(_convert_uniform(lcoos, f)) for f in candidates]
+        rvars = [stack_parts(_convert_uniform(rcoos, f)) for f in candidates]
+        local = SwitchDynamicMatrix(lvars, jnp.asarray(lids))
+        remote = SwitchDynamicMatrix(rvars, jnp.asarray(rids))
+    else:
+        raise ValueError(mode)
+
+    A = DistSparseMatrix(local, remote, nshards=nshards, mp=pc.mp, shape=shape,
+                         axis=axis, halo_mode=pc.halo_mode, hw=pc.hw)
+    return _shard_containers(A, mesh)
+
+
+def _shard_containers(A: DistSparseMatrix, mesh: Mesh) -> DistSparseMatrix:
+    """Place stacked shard arrays with their leading axis on the mesh."""
+    axis = A.axis
+
+    def put(t):
+        return jax.tree.map(
+            lambda a: jax.device_put(a, NamedSharding(mesh, P(axis, *(None,) * (a.ndim - 1)))), t)
+
+    return DistSparseMatrix(put(A.local), put(A.remote), nshards=A.nshards,
+                            mp=A.mp, shape=A.shape, axis=axis,
+                            halo_mode=A.halo_mode, hw=A.hw)
+
+
+def activate_dist(A: DistSparseMatrix, part: str, fmt_or_ids) -> DistSparseMatrix:
+    """Runtime format switch of the local or remote part (paper activate())."""
+    tgt = getattr(A, part)
+    if isinstance(tgt, SwitchDynamicMatrix):
+        if isinstance(fmt_or_ids, Format):
+            new = tgt.activate(fmt_or_ids)
+        else:
+            new = tgt.activate_id(jnp.asarray(fmt_or_ids, jnp.int32))
+    else:
+        raise TypeError("uniform-mode parts switch via build (conversion); "
+                        "use mode='multiformat' for runtime switching")
+    kw = dict(nshards=A.nshards, mp=A.mp, shape=A.shape, axis=A.axis,
+              halo_mode=A.halo_mode, hw=A.hw)
+    return (DistSparseMatrix(new, A.remote, **kw) if part == "local"
+            else DistSparseMatrix(A.local, new, **kw))

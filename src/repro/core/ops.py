@@ -1,0 +1,268 @@
+"""Algorithms over sparse containers (the paper's §III-D algorithm layer).
+
+Every algorithm has one generic entry point that dispatches on the container
+type at *trace* time — the JAX analogue of the paper's compile-time
+introspection dispatch. The implementations here are the pure-jnp "reference
+backend" (the paper's Serial/OpenMP backends); `repro.kernels` provides the
+Pallas TPU backend for the hot formats, selected via ``backend=``.
+
+SpMV is the paper's evaluated hot spot; we also provide SpMM (needed by the
+block-sparse / MoE integration) and the dense-vector algorithms used by CG
+(dot, waxpby, axpy, norm2) plus diagonal extract/update (HPCG's TestCG).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BSR, COO, CSR, DIA, ELL, Dense, HYB
+
+# ---------------------------------------------------------------------------
+# SpMV: y = A @ x
+# ---------------------------------------------------------------------------
+
+
+def _spmv_coo(A: COO, x):
+    contrib = A.data * jnp.take(x, A.col, mode="clip")
+    return jax.ops.segment_sum(contrib, A.row, num_segments=A.shape[0])
+
+
+def _spmv_csr(A: CSR, x):
+    # TPU adaptation: no warp-per-row — recover row ids from indptr and use a
+    # vectorised gather + segment reduction (see DESIGN.md §2).
+    cap = A.capacity
+    k = jnp.arange(cap, dtype=jnp.int32)
+    rows = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
+    rows = jnp.clip(rows, 0, A.shape[0] - 1)
+    contrib = A.data * jnp.take(x, A.indices, mode="clip")
+    return jax.ops.segment_sum(contrib, rows, num_segments=A.shape[0])
+
+
+def _spmv_dia(A: DIA, x):
+    # The TPU-ideal path: one shifted contiguous multiply-add per diagonal.
+    m, n = A.shape
+    i = jnp.arange(m, dtype=jnp.int32)[None, :]
+    cols = i + A.offsets[:, None].astype(jnp.int32)
+    valid = (cols >= 0) & (cols < n)
+    xv = jnp.take(x, jnp.clip(cols, 0, n - 1), mode="clip")
+    return jnp.sum(jnp.where(valid, A.data * xv, 0), axis=0)
+
+
+def _spmv_ell(A: ELL, x):
+    return jnp.sum(A.data * jnp.take(x, A.cols, mode="clip"), axis=1)
+
+
+def _spmv_bsr(A: BSR, x):
+    bs = A.block_size
+    m, n = A.shape
+    xb = x.reshape(n // bs, bs)
+    gathered = jnp.take(xb, A.indices, axis=0, mode="clip")  # (nblk, bs)
+    prod = jnp.einsum("nij,nj->ni", A.data, gathered)
+    k = jnp.arange(A.nblocks, dtype=jnp.int32)
+    brow = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
+    brow = jnp.clip(brow, 0, m // bs - 1)
+    yb = jax.ops.segment_sum(prod, brow, num_segments=m // bs)
+    return yb.reshape(m)
+
+
+def _spmv_dense(A: Dense, x):
+    return A.data @ x
+
+
+def _spmv_hyb(A: HYB, x):
+    return _spmv_ell(A.ell, x) + _spmv_coo(A.coo, x)
+
+
+_SPMV = {COO: _spmv_coo, CSR: _spmv_csr, DIA: _spmv_dia, ELL: _spmv_ell,
+         BSR: _spmv_bsr, Dense: _spmv_dense, HYB: _spmv_hyb}
+
+
+def spmv(A, x, backend: str = "ref"):
+    """y = A @ x. ``backend='ref'`` pure-jnp; ``'pallas'`` TPU kernels where
+    available (DIA/ELL/BSR), falling back to ref otherwise."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops  # lazy: keep core import-light
+        fn = kops.SPMV_PALLAS.get(type(A))
+        if fn is not None:
+            return fn(A, x)
+    if isinstance(A, _DYN_TYPES):
+        return A.spmv(x, backend=backend)
+    return _SPMV[type(A)](A, x)
+
+
+# ---------------------------------------------------------------------------
+# SpMM: Y = A @ B (B dense, column-major tiles on TPU)
+# ---------------------------------------------------------------------------
+
+
+def _spmm_coo(A: COO, B):
+    contrib = A.data[:, None] * jnp.take(B, A.col, axis=0, mode="clip")
+    return jax.ops.segment_sum(contrib, A.row, num_segments=A.shape[0])
+
+
+def _spmm_csr(A: CSR, B):
+    cap = A.capacity
+    k = jnp.arange(cap, dtype=jnp.int32)
+    rows = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
+    rows = jnp.clip(rows, 0, A.shape[0] - 1)
+    contrib = A.data[:, None] * jnp.take(B, A.indices, axis=0, mode="clip")
+    return jax.ops.segment_sum(contrib, rows, num_segments=A.shape[0])
+
+
+def _spmm_dia(A: DIA, B):
+    m, n = A.shape
+    i = jnp.arange(m, dtype=jnp.int32)[None, :]
+    cols = i + A.offsets[:, None].astype(jnp.int32)
+    valid = (cols >= 0) & (cols < n)
+    bv = jnp.take(B, jnp.clip(cols, 0, n - 1), axis=0, mode="clip")  # (nd, M, K)
+    return jnp.sum(jnp.where(valid[..., None], A.data[..., None] * bv, 0), axis=0)
+
+
+def _spmm_ell(A: ELL, B):
+    bv = jnp.take(B, A.cols, axis=0, mode="clip")  # (M, K, Kb)
+    return jnp.sum(A.data[..., None] * bv, axis=1)
+
+
+def _spmm_bsr(A: BSR, B):
+    # The MXU path: every stored block is a (bs x bs) x (bs x Kb) matmul.
+    bs = A.block_size
+    m, n = A.shape
+    kb = B.shape[1]
+    Bb = B.reshape(n // bs, bs, kb)
+    gathered = jnp.take(Bb, A.indices, axis=0, mode="clip")  # (nblk, bs, Kb)
+    prod = jnp.einsum("nij,njk->nik", A.data, gathered)
+    k = jnp.arange(A.nblocks, dtype=jnp.int32)
+    brow = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
+    brow = jnp.clip(brow, 0, m // bs - 1)
+    yb = jax.ops.segment_sum(prod, brow, num_segments=m // bs)
+    return yb.reshape(m, kb)
+
+
+def _spmm_dense(A: Dense, B):
+    return A.data @ B
+
+
+def _spmm_hyb(A: HYB, B):
+    return _spmm_ell(A.ell, B) + _spmm_coo(A.coo, B)
+
+
+_SPMM = {COO: _spmm_coo, CSR: _spmm_csr, DIA: _spmm_dia, ELL: _spmm_ell,
+         BSR: _spmm_bsr, Dense: _spmm_dense, HYB: _spmm_hyb}
+
+
+def spmm(A, B, backend: str = "ref"):
+    """Y = A @ B with dense B of shape (N, K)."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        fn = kops.SPMM_PALLAS.get(type(A))
+        if fn is not None:
+            return fn(A, B)
+    if isinstance(A, _DYN_TYPES):
+        return A.spmm(B, backend=backend)
+    return _SPMM[type(A)](A, B)
+
+
+# ---------------------------------------------------------------------------
+# Diagonal extract / update (HPCG's TestCG mutates the diagonal)
+# ---------------------------------------------------------------------------
+
+
+def extract_diagonal(A):
+    m, n = A.shape
+    d = min(m, n)
+    if isinstance(A, HYB):
+        return extract_diagonal(A.ell) + extract_diagonal(A.coo)
+    if isinstance(A, COO):
+        on = (A.row == A.col) & (A.row < d)
+        return jax.ops.segment_sum(jnp.where(on, A.data, 0), jnp.clip(A.row, 0, d - 1), num_segments=d)
+    if isinstance(A, CSR):
+        from repro.core.convert import csr_to_coo
+        return extract_diagonal(csr_to_coo(A))
+    if isinstance(A, DIA):
+        slot = jnp.argmax(A.offsets == 0)
+        has = jnp.any(A.offsets == 0)
+        return jnp.where(has, A.data[slot, :d], 0)
+    if isinstance(A, ELL):
+        i = jnp.arange(A.shape[0], dtype=jnp.int32)[:, None]
+        on = A.cols == i
+        return jnp.sum(jnp.where(on, A.data, 0), axis=1)[:d]
+    if isinstance(A, BSR):
+        from repro.core.convert import bsr_to_coo
+        return extract_diagonal(bsr_to_coo(A))
+    if isinstance(A, Dense):
+        return jnp.diagonal(A.data)[:d]
+    raise TypeError(type(A))
+
+
+def update_diagonal(A, new_diag):
+    """Replace the main diagonal values (pattern must already contain it)."""
+    if isinstance(A, COO):
+        on = (A.row == A.col)
+        return COO(A.row, A.col, jnp.where(on, jnp.take(new_diag, jnp.clip(A.row, 0, new_diag.shape[0] - 1), mode="clip"), A.data), A.shape, A.nnz)
+    if isinstance(A, CSR):
+        cap = A.capacity
+        k = jnp.arange(cap, dtype=jnp.int32)
+        rows = jnp.clip(jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1, 0, A.shape[0] - 1)
+        on = A.indices == rows
+        return CSR(A.indptr, A.indices, jnp.where(on, jnp.take(new_diag, rows, mode="clip"), A.data), A.shape, A.nnz)
+    if isinstance(A, DIA):
+        slot = jnp.argmax(A.offsets == 0)
+        row = jnp.zeros((A.data.shape[1],), A.dtype).at[:new_diag.shape[0]].set(new_diag.astype(A.dtype))
+        return DIA(A.offsets, A.data.at[slot].set(row), A.shape, A.nnz)
+    if isinstance(A, ELL):
+        i = jnp.arange(A.shape[0], dtype=jnp.int32)[:, None]
+        on = A.cols == i
+        vals = jnp.take(new_diag, jnp.clip(i[:, 0], 0, new_diag.shape[0] - 1), mode="clip")[:, None]
+        return ELL(A.cols, jnp.where(on, vals, A.data), A.shape, A.nnz)
+    if isinstance(A, Dense):
+        d = min(A.shape)
+        i = jnp.arange(d)
+        return Dense(A.data.at[i, i].set(new_diag[:d].astype(A.dtype)), A.shape, A.nnz)
+    raise TypeError(type(A))
+
+
+# ---------------------------------------------------------------------------
+# Dense-vector algorithms (paper §III-D: dot, WAXPBY, reduction, assign)
+# ---------------------------------------------------------------------------
+
+
+def dot(x, y):
+    return jnp.dot(x, y)
+
+
+def waxpby(alpha, x, beta, y):
+    """w = alpha*x + beta*y (HPCG's vector update)."""
+    return alpha * x + beta * y
+
+
+def axpy(alpha, x, y):
+    return alpha * x + y
+
+
+def norm2(x):
+    return jnp.sqrt(jnp.dot(x, x))
+
+
+def assign(x, value):
+    """Morpheus::assign — fill (ZeroVector when value == 0)."""
+    return jnp.full_like(x, value)
+
+
+def reduction(x):
+    return jnp.sum(x)
+
+
+def scan(x):
+    return jnp.cumsum(x)
+
+
+# populated by repro.core.dynamic to avoid a circular import
+_DYN_TYPES: tuple = ()
+
+
+def _register_dynamic(*types):
+    global _DYN_TYPES
+    _DYN_TYPES = tuple(set(_DYN_TYPES) | set(types))

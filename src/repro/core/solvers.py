@@ -1,0 +1,120 @@
+"""Iterative solvers over (dynamic, possibly distributed) sparse matrices.
+
+CG is the paper's workload (HPCG with the preconditioner disabled, §IV-B).
+The solver is generic over an ``apply_A`` closure so the same loop runs:
+  * single device, any concrete/dynamic format       (paper Fig. 4)
+  * distributed local/remote split across a mesh     (paper Fig. 5)
+Vector algebra goes through repro.core.ops (dot/waxpby/axpy/norm2), the
+algorithms the paper exposes for DenseVector.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as _ops
+
+
+class CGResult(NamedTuple):
+    x: jax.Array
+    iters: jax.Array
+    resnorm: jax.Array  # final ||r||_2
+
+
+def cg(apply_A: Callable, b: jax.Array, x0: Optional[jax.Array] = None,
+       tol: float = 1e-8, maxiter: int = 100) -> CGResult:
+    """Unpreconditioned conjugate gradients (HPCG's optimized-phase solve).
+
+    Runs a fixed-shape lax.while_loop; all reductions are global (XLA emits
+    the cross-shard all-reduce when b is sharded).
+    """
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    r0 = b - apply_A(x0)
+    p0 = r0
+    rs0 = _ops.dot(r0, r0)
+    tol2 = jnp.asarray(tol, b.dtype) ** 2 * jnp.maximum(rs0, 1e-30)
+
+    def cond(state):
+        _, _, _, rs, k = state
+        return (rs > tol2) & (k < maxiter)
+
+    def body(state):
+        x, r, p, rs, k = state
+        Ap = apply_A(p)
+        alpha = rs / jnp.maximum(_ops.dot(p, Ap), 1e-30)
+        x = _ops.axpy(alpha, p, x)
+        r = _ops.axpy(-alpha, Ap, r)
+        rs_new = _ops.dot(r, r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = _ops.waxpby(1.0, r, beta, p)
+        return x, r, p, rs_new, k + 1
+
+    x, r, p, rs, k = jax.lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
+    return CGResult(x, k, jnp.sqrt(rs))
+
+
+def cg_fixed_iters(apply_A: Callable, b: jax.Array,
+                   x0: Optional[jax.Array] = None, iters: int = 50) -> CGResult:
+    """Fixed-iteration CG (benchmark timing variant: no early exit, the
+    HPCG 'optimized problem timing' loop shape)."""
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    r0 = b - apply_A(x0)
+    rs0 = _ops.dot(r0, r0)
+
+    def body(state, _):
+        x, r, p, rs = state
+        Ap = apply_A(p)
+        alpha = rs / jnp.maximum(_ops.dot(p, Ap), 1e-30)
+        x = _ops.axpy(alpha, p, x)
+        r = _ops.axpy(-alpha, Ap, r)
+        rs_new = _ops.dot(r, r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = _ops.waxpby(1.0, r, beta, p)
+        return (x, r, p, rs_new), None
+
+    (x, r, _, rs), _ = jax.lax.scan(body, (x0, r0, r0, rs0), None, length=iters)
+    return CGResult(x, jnp.asarray(iters), jnp.sqrt(rs))
+
+
+def pcg(apply_A: Callable, b: jax.Array, diag_A: jax.Array,
+        x0: Optional[jax.Array] = None, tol: float = 1e-8,
+        maxiter: int = 100) -> CGResult:
+    """Jacobi-preconditioned CG.
+
+    HPCG's reference preconditioner is a symmetric Gauss-Seidel sweep whose
+    triangular solves are inherently sequential — hostile to every vector
+    architecture (the paper disables preconditioning for the same reason,
+    §IV-B). Jacobi (M = diag(A)) is the standard vector-friendly stand-in:
+    one elementwise multiply, same convergence class on the HPCG operator.
+    ``diag_A`` comes from extract_diagonal() on any (dynamic) format.
+    """
+    minv = jnp.where(jnp.abs(diag_A) > 1e-30, 1.0 / diag_A, 0.0)
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    r0 = b - apply_A(x0)
+    z0 = minv * r0
+    p0 = z0
+    rz0 = _ops.dot(r0, z0)
+    rr0 = _ops.dot(r0, r0)
+    tol2 = jnp.asarray(tol, b.dtype) ** 2 * jnp.maximum(rr0, 1e-30)
+
+    def cond(state):
+        _, r, _, _, k = state
+        return (_ops.dot(r, r) > tol2) & (k < maxiter)
+
+    def body(state):
+        x, r, p, rz, k = state
+        Ap = apply_A(p)
+        alpha = rz / jnp.maximum(_ops.dot(p, Ap), 1e-30)
+        x = _ops.axpy(alpha, p, x)
+        r = _ops.axpy(-alpha, Ap, r)
+        z = minv * r
+        rz_new = _ops.dot(r, z)
+        beta = rz_new / jnp.maximum(rz, 1e-30)
+        p = _ops.waxpby(1.0, z, beta, p)
+        return x, r, p, rz_new, k + 1
+
+    x, r, p, rz, k = jax.lax.while_loop(cond, body, (x0, r0, p0, rz0, 0))
+    return CGResult(x, k, jnp.sqrt(_ops.dot(r, r)))

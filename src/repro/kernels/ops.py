@@ -1,0 +1,74 @@
+"""jit'd wrappers binding the Pallas kernels to the core containers.
+
+``INTERPRET`` is True off-TPU: the kernel bodies execute in Python on CPU
+(correctness validation); on TPU the same code lowers through Mosaic.
+
+Wrappers enforce each kernel's structural preconditions and fall back to the
+pure-jnp reference path when they do not hold (e.g. x too large for VMEM
+residency, empty BSR block rows) — the dynamic-format machinery guarantees a
+correct answer either way.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BSR, DIA, ELL
+from repro.kernels import bsr_spmm as _bsr
+from repro.kernels import dia_spmv as _dia
+from repro.kernels import ell_spmv as _ell
+
+INTERPRET = jax.default_backend() != "tpu"
+
+# VMEM residency budget for the x vector (bytes); beyond this the wrappers
+# fall back to the reference path (v5e has ~16 MiB VMEM per core).
+X_VMEM_BUDGET = 6 * 1024 * 1024
+
+
+def dia_spmv(A: DIA, x: jax.Array, tm: int = 512) -> jax.Array:
+    n = A.shape[1]
+    if (n + 2 * (A.data.shape[1] + tm)) * x.dtype.itemsize > X_VMEM_BUDGET:
+        from repro.core import ops as core_ops
+        return core_ops._spmv_dia(A, x)
+    return _dia.dia_spmv(A.offsets, A.data, x, n, tm=tm, interpret=INTERPRET)
+
+
+def ell_spmv(A: ELL, x: jax.Array, tm: int = 256) -> jax.Array:
+    if x.size * x.dtype.itemsize > X_VMEM_BUDGET:
+        from repro.core import ops as core_ops
+        return core_ops._spmv_ell(A, x)
+    return _ell.ell_spmv(A.cols, A.data, x, tm=tm, interpret=INTERPRET)
+
+
+def _bsr_brow(A: BSR):
+    """Precompute (host) the non-decreasing block-row id of every block."""
+    indptr = np.asarray(A.indptr)
+    nblk = A.nblocks
+    brow = np.searchsorted(indptr, np.arange(nblk), side="right").astype(np.int32) - 1
+    return jnp.asarray(np.clip(brow, 0, max(0, len(indptr) - 2)))
+
+
+def _bsr_rows_nonempty(A: BSR) -> bool:
+    indptr = np.asarray(A.indptr)
+    return bool(np.all(np.diff(indptr) >= 1)) and int(indptr[-1]) == A.nblocks
+
+
+def bsr_spmm(A: BSR, B: jax.Array, tn: int = 128) -> jax.Array:
+    if not _bsr_rows_nonempty(A):
+        from repro.core import ops as core_ops
+        return core_ops._spmm_bsr(A, B)
+    brow = _bsr_brow(A)
+    return _bsr.bsr_spmm(A.indptr, brow, A.indices, A.data, B, A.shape[0],
+                         tn=tn, interpret=INTERPRET)
+
+
+def bsr_spmv(A: BSR, x: jax.Array, tn: int = 128) -> jax.Array:
+    return bsr_spmm(A, x[:, None], tn=tn)[:, 0]
+
+
+# Registries consumed by repro.core.ops.spmv/spmm(backend="pallas").
+SPMV_PALLAS = {DIA: dia_spmv, ELL: ell_spmv, BSR: bsr_spmv}
+SPMM_PALLAS = {BSR: bsr_spmm}

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification the kernel must reproduce;
+tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dia_spmv_ref(offsets: jax.Array, data: jax.Array, x: jax.Array, n: int) -> jax.Array:
+    """y[i] = sum_d data[d, i] * x[i + offsets[d]]  (zero outside [0, n)).
+
+    Accumulates in f32 (the kernels' accumulator dtype — the accurate spec).
+    """
+    m = data.shape[1]
+    i = jnp.arange(m, dtype=jnp.int32)[None, :]
+    cols = i + offsets[:, None].astype(jnp.int32)
+    valid = (cols >= 0) & (cols < n)
+    xv = jnp.take(x, jnp.clip(cols, 0, n - 1), mode="clip").astype(jnp.float32)
+    acc = jnp.sum(jnp.where(valid, data.astype(jnp.float32) * xv, 0), axis=0)
+    return acc.astype(x.dtype)
+
+
+def ell_spmv_ref(cols: jax.Array, data: jax.Array, x: jax.Array) -> jax.Array:
+    """y[i] = sum_k data[i, k] * x[cols[i, k]] (f32 accumulation)."""
+    acc = jnp.sum(data.astype(jnp.float32)
+                  * jnp.take(x, cols, mode="clip").astype(jnp.float32), axis=1)
+    return acc.astype(x.dtype)
+
+
+def bsr_spmm_ref(indptr: jax.Array, indices: jax.Array, blocks: jax.Array,
+                 B: jax.Array, m: int) -> jax.Array:
+    """Y = A @ B for block-CSR A with (bs x bs) blocks; B is (N, K)."""
+    bs = blocks.shape[1]
+    nblk = blocks.shape[0]
+    kb = B.shape[1]
+    Bb = B.reshape(B.shape[0] // bs, bs, kb)
+    gathered = jnp.take(Bb, indices, axis=0, mode="clip")
+    prod = jnp.einsum("nij,njk->nik", blocks.astype(jnp.float32),
+                      gathered.astype(jnp.float32))
+    k = jnp.arange(nblk, dtype=jnp.int32)
+    brow = jnp.searchsorted(indptr, k, side="right").astype(jnp.int32) - 1
+    brow = jnp.clip(brow, 0, m // bs - 1)
+    yb = jax.ops.segment_sum(prod, brow, num_segments=m // bs)
+    return yb.reshape(m, kb).astype(B.dtype)

@@ -1,0 +1,35 @@
+"""Production mesh definitions (DESIGN.md §5).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """General mesh builder for tests/benchmarks (e.g. (8,), ('data',))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a production mesh ('pod' included)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def tp_axis(mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def flat_axes(mesh) -> tuple:
+    """All axes flattened — used by the HPCG row partition (512-way)."""
+    return tuple(mesh.axis_names)

@@ -1,0 +1,2 @@
+"""Model stack: layers, attention, MoE, Mamba2/SSD, assembly."""
+from repro.models.model import Model, build_model, lm_loss

@@ -1,0 +1,123 @@
+"""GQA attention: flash-style chunked softmax (train/prefill) + cached decode.
+
+The chunked path never materialises the full (S x S) score matrix: query
+chunks are a static reshape, key/value chunks a ``lax.scan`` with an online
+(max, sum, acc) softmax carry — the standard memory-linear attention
+formulation, which is what makes the 32k-prefill cells compile within HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flash import flash_attention
+from repro.models.layers import P, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    s = {
+        "wq": P((d, h * hd), ("embed", "heads")),
+        "wk": P((d, kv * hd), ("embed", "kv")),
+        "wv": P((d, kv * hd), ("embed", "kv")),
+        "wo": P((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P((h * hd,), ("heads",), init="zeros")
+        s["bk"] = P((kv * hd,), ("kv",), init="zeros")
+        s["bv"] = P((kv * hd,), ("kv",), init="zeros")
+    return s
+
+
+def _project_qkv(p, x, cfg, positions):
+    dt = x.dtype
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.n_heads > 0 and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg, *, causal: bool, positions=None,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    unroll: bool = False, return_kv: bool = False):
+    """Full attention over x. Returns (out, (k, v) | None)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = flash_attention(q, k, v, causal, q_chunk, kv_chunk, unroll)
+    out = out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+    return (out, (k, v)) if return_kv else (out, None)
+
+
+def _quantize_kv(vec):
+    """Per-(token, head) int8 quantization: vec (..., D) -> (int8, scale)."""
+    scale = jnp.max(jnp.abs(vec.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(vec.astype(jnp.float32)
+                  / jnp.maximum(scale, 1e-12)[..., None]).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def decode_attention(p, x, k_cache, v_cache, pos, cfg,
+                     k_scale=None, v_scale=None):
+    """One-token cached decode. x: (B,1,d); caches: (B,S_max,KV,D); pos: (B,)
+    index of the slot the new token writes.
+
+    int8 cache mode (the dynamic-format idea applied to the KV container —
+    the only way MHA-40 x 32k x 128 fits HBM, see §Perf): caches are int8
+    with bf16 per-(token, head) ``k_scale``/``v_scale``; dequantisation is a
+    per-layer transient. Returns (out, k_cache, v_cache[, scales...]).
+    """
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    g = h // kvh
+    quant = k_scale is not None
+    positions = pos[:, None].astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+
+    # write the new kv at pos (per batch row)
+    bidx = jnp.arange(b)
+    if quant:
+        kq, ks = _quantize_kv(k_new[:, 0])
+        vq, vs = _quantize_kv(v_new[:, 0])
+        k_cache = k_cache.at[bidx, pos].set(kq)
+        v_cache = v_cache.at[bidx, pos].set(vq)
+        k_scale = k_scale.at[bidx, pos].set(ks)
+        v_scale = v_scale.at[bidx, pos].set(vs)
+        k_eff = k_cache.astype(q.dtype) * k_scale.astype(q.dtype)[..., None]
+        v_eff = v_cache.astype(q.dtype) * v_scale.astype(q.dtype)[..., None]
+    else:
+        k_cache = k_cache.at[bidx, pos].set(k_new[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, pos].set(v_new[:, 0].astype(v_cache.dtype))
+        k_eff = k_cache.astype(q.dtype)
+        v_eff = v_cache.astype(q.dtype)
+
+    qh = q.reshape(b, kvh, g, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qh, k_eff,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = jnp.arange(k_cache.shape[1], dtype=jnp.int32)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w.astype(q.dtype), v_eff,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * hd).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    if quant:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache

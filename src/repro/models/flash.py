@@ -1,0 +1,177 @@
+"""Flash attention with a hand-derived chunked backward (custom_vjp).
+
+Why: differentiating through the online-softmax scan makes JAX save the
+per-chunk score tiles (or per-step accumulators) — O(S^2) or O(nk * S * D)
+f32 residuals per layer, ~13 GiB/device for the 104B train cell. The
+flash-attention backward recomputes score tiles from (q, k, v, out, lse)
+instead, so residuals are O(S * D): this file is the memory-critical path
+that makes every train_4k cell fit HBM.
+
+Math (per q-chunk i, kv-chunk j, per head; scale s = d^-1/2):
+    S_ij = s * Q_i K_j^T          P_ij = exp(S_ij - lse_i)
+    dV_j += P_ij^T dO_i
+    dP_ij = dO_i V_j^T            D_i = rowsum(dO_i * O_i)
+    dS_ij = P_ij * (dP_ij - D_i)
+    dQ_i += s * dS_ij K_j         dK_j += s * dS_ij^T Q_i
+
+Shapes: q (B,Sq,H,D); k,v (B,Skv,KV,D); GQA via H = KV * G.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _fwd_impl(q, k, v, causal, q_chunk, kv_chunk, unroll):
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = d ** -0.5
+    qc, kc = min(q_chunk, sq), min(kv_chunk, skv)
+    nq, nk = sq // qc, skv // kc
+
+    qr = q.reshape(b, nq, qc, kvh, g, d)
+    kr = k.reshape(b, nk, kc, kvh, d)
+    vr = v.reshape(b, nk, kc, kvh, d)
+    q_pos = jnp.arange(sq, dtype=jnp.int32).reshape(nq, qc)
+    k_pos = jnp.arange(skv, dtype=jnp.int32).reshape(nk, kc)
+
+    def per_qchunk(q_i, qpos_i):
+        def step(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, kpos_j = inp
+            s_ij = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                              preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = qpos_i[:, None] >= kpos_j[None, :]
+                s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            m_new = jnp.maximum(m, s_ij.max(axis=-1))
+            p_ij = jnp.exp(s_ij - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p_ij.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p_ij.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, d), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for j in range(nk):
+                carry, _ = step(carry, (kr[:, j], vr[:, j], k_pos[j]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                step, (m0, l0, a0),
+                (kr.swapaxes(0, 1), vr.swapaxes(0, 1), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse  # (b,kvh,g,qc,d), (b,kvh,g,qc)
+
+    out, lse = jax.vmap(per_qchunk, in_axes=(1, 0), out_axes=(1, 1))(qr, q_pos)
+    # out: (b,nq,kvh,g,qc,d) -> (b,sq,h,d);  lse: (b,nq,kvh,g,qc)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, sq, h, d).astype(q.dtype)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 1024, unroll: bool = False):
+    out, _ = _fwd_impl(q, k, v, causal, q_chunk, kv_chunk, unroll)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, q_chunk, kv_chunk, unroll):
+    out, lse = _fwd_impl(q, k, v, causal, q_chunk, kv_chunk, unroll)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_chunk, kv_chunk, unroll, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = d ** -0.5
+    qc, kc = min(q_chunk, sq), min(kv_chunk, skv)
+    nq, nk = sq // qc, skv // kc
+
+    qr = q.reshape(b, nq, qc, kvh, g, d)
+    dor = dout.reshape(b, nq, qc, kvh, g, d)
+    our = out.reshape(b, nq, qc, kvh, g, d)
+    kr = k.reshape(b, nk, kc, kvh, d)
+    vr = v.reshape(b, nk, kc, kvh, d)
+    q_pos = jnp.arange(sq, dtype=jnp.int32).reshape(nq, qc)
+    k_pos = jnp.arange(skv, dtype=jnp.int32).reshape(nk, kc)
+    # D_i = rowsum(dO * O): (b, nq, kvh, g, qc)
+    delta = jnp.einsum("bnqhgd,bnqhgd->bnhgq", dor.astype(jnp.float32),
+                       our.astype(jnp.float32))
+    lse_r = lse  # (b, nq, kvh, g, qc)
+
+    def qstep(carry, inp):
+        dk_acc, dv_acc = carry
+        q_i, do_i, lse_i, delta_i, qpos_i = inp
+
+        def kstep(c2, inp2):
+            dq_i, dk_acc, dv_acc = c2
+            j, kpos_j = inp2
+            k_j = jax.lax.dynamic_index_in_dim(kr, j, 1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vr, j, 1, keepdims=False)
+            s_ij = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                              preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = qpos_i[:, None] >= kpos_j[None, :]
+                s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            p_ij = jnp.exp(s_ij - lse_i[..., None])
+            dv_j = jnp.einsum("bhgqk,bqhgd->bkhd", p_ij,
+                              do_i.astype(jnp.float32))
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_i.astype(jnp.float32),
+                            v_j.astype(jnp.float32))
+            ds = p_ij * (dp - delta_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                     k_j.astype(jnp.float32))
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q_i.astype(jnp.float32))
+            dk_acc = dk_acc.at[:, j].add(dk_j)
+            dv_acc = dv_acc.at[:, j].add(dv_j)
+            return (dq_i, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, qc, kvh, g, d), jnp.float32)
+        if unroll:
+            c2 = (dq0, dk_acc, dv_acc)
+            for j in range(nk):
+                c2, _ = kstep(c2, (jnp.asarray(j), k_pos[j]))
+            dq_i, dk_acc, dv_acc = c2
+        else:
+            (dq_i, dk_acc, dv_acc), _ = jax.lax.scan(
+                kstep, (dq0, dk_acc, dv_acc),
+                (jnp.arange(nk), k_pos))
+        return (dk_acc, dv_acc), dq_i
+
+    dk0 = jnp.zeros((b, nk, kc, kvh, d), jnp.float32)
+    dv0 = jnp.zeros((b, nk, kc, kvh, d), jnp.float32)
+    xs = (qr.swapaxes(0, 1), dor.swapaxes(0, 1), lse_r.swapaxes(0, 1),
+          delta.swapaxes(0, 1), q_pos)
+    if unroll:
+        carry = (dk0, dv0)
+        dqs = []
+        for i in range(nq):
+            carry, dq_i = qstep(carry, jax.tree.map(lambda a: a[i], xs))
+            dqs.append(dq_i)
+        dk_acc, dv_acc = carry
+        dq = jnp.stack(dqs, axis=1)
+    else:
+        (dk_acc, dv_acc), dq = jax.lax.scan(qstep, (dk0, dv0), xs)
+        dq = dq.swapaxes(0, 1)  # (b, nq, qc, kvh, g, d)
+
+    dq = dq.reshape(b, sq, h, d).astype(q.dtype)
+    dk = dk_acc.reshape(b, skv, kvh, d).astype(k.dtype)
+    dv = dv_acc.reshape(b, skv, kvh, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

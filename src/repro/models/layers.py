@@ -1,0 +1,93 @@
+"""Common model layers: norms, RoPE, MLPs, embeddings.
+
+Functional style: ``*_specs(cfg)`` returns the P-spec tree, ``*_apply``
+consumes the matching params subtree. Compute dtype follows the input
+activations; params are cast at the call site (mixed precision).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import P
+
+
+def rms_norm(x, w, eps: float):
+    # f32 only for the per-token statistics: the (B,S,D)-sized products
+    # stay in the activation dtype (a full f32 copy per call costs ~3 GiB
+    # per 104B-train layer in the backward; see EXPERIMENTS.md §Perf).
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return (x * inv) * w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, ff: int, act: str) -> dict:
+    if act == "swiglu":
+        return {
+            "gate": P((d, ff), ("embed", "mlp")),
+            "up": P((d, ff), ("embed", "mlp")),
+            "down": P((ff, d), ("mlp", "embed")),
+        }
+    return {
+        "up": P((d, ff), ("embed", "mlp")),
+        "up_b": P((ff,), ("mlp",), init="zeros"),
+        "down": P((ff, d), ("mlp", "embed")),
+        "down_b": P((d,), ("embed",), init="zeros"),
+    }
+
+
+def mlp_apply(p, x, act: str):
+    dt = x.dtype
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["gate"].astype(dt)) * (x @ p["up"].astype(dt))
+        return h @ p["down"].astype(dt)
+    h = jax.nn.gelu(x @ p["up"].astype(dt) + p["up_b"].astype(dt))
+    return h @ p["down"].astype(dt) + p["down_b"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(vocab: int, d: int) -> dict:
+    return {"tokens": P((vocab, d), ("vocab", "embed"), init="small_normal")}
+
+
+def embed_apply(p, tokens, dtype):
+    return jnp.take(p["tokens"], tokens, axis=0).astype(dtype)
+
+
+def unembed_specs(d: int, vocab: int) -> dict:
+    return {"out": P((d, vocab), ("embed", "vocab"))}
+
+
+def unembed_apply(p, x):
+    # logits in f32 for numerically-stable CE
+    return (x @ p["out"].astype(x.dtype)).astype(jnp.float32)

@@ -1,0 +1,90 @@
+"""LinearSparse: a linear layer whose weight is a dynamic sparse matrix.
+
+The paper's technique applied to *weights* (DESIGN.md §4, minitron-8b):
+a pruned model's linears are served from a runtime-selectable sparse
+container — decode is memory-bandwidth-bound, so storing only the surviving
+weights converts sparsity directly into read-bandwidth savings, and the
+best container (ELL for balanced rows, BSR for block-pruned, CSR/COO for
+ragged) is a per-matrix runtime decision made by the same auto-tuner that
+drives SpMV format selection.
+
+    w_sparse = prune_magnitude(w, density=0.25)          # host, once
+    layer    = LinearSparse.from_dense(w_sparse, fmt=None)  # autotuned
+    y        = layer(x)                                  # spmm path
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DynamicMatrix, Format, analytic_select, autotune,
+                        coo_from_dense_np, convert, spmm)
+from repro.core.autotune import PatternStats
+
+
+def prune_magnitude(w: np.ndarray, density: float) -> np.ndarray:
+    """Global magnitude pruning: keep the largest |w| entries."""
+    w = np.asarray(w)
+    k = max(1, int(density * w.size))
+    thresh = np.partition(np.abs(w).ravel(), -k)[-k]
+    return np.where(np.abs(w) >= thresh, w, 0.0).astype(w.dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+class LinearSparse:
+    """y = x @ W with W stored as a DynamicMatrix (any supported format)."""
+
+    def __init__(self, weight: DynamicMatrix, bias=None):
+        self.weight = weight  # DynamicMatrix of shape (d_in, d_out)
+        self.bias = bias
+
+    @classmethod
+    def from_dense(cls, w, fmt: Optional[Format] = None, bias=None,
+                   tune: str = "analytic", **conv_kwargs) -> "LinearSparse":
+        """Build from a (pruned) dense weight (d_in, d_out); fmt=None
+        auto-tunes. Stored TRANSPOSED (d_out, d_in): y = x@W computes as
+        spmm(W^T, x^T)^T — SpMM contracts the stored matrix's columns."""
+        coo = coo_from_dense_np(np.asarray(w).T)
+        if fmt is None:
+            if tune == "analytic":
+                fmt = analytic_select(
+                    PatternStats.from_coo(coo),
+                    candidates=(Format.CSR, Format.ELL, Format.HYB, Format.COO),
+                ).best
+            else:
+                x = jnp.ones((coo.shape[0],), jnp.float32)
+                fmt = autotune(coo, x, mode="profile", iters=3,
+                               candidates=(Format.CSR, Format.ELL, Format.HYB,
+                                           Format.COO)).best
+        return cls(DynamicMatrix(convert(coo, fmt, **conv_kwargs)), bias)
+
+    @property
+    def format(self) -> Format:
+        return self.weight.active
+
+    def activate(self, fmt: Format, **kw) -> "LinearSparse":
+        """Runtime format switch (paper activate())."""
+        return LinearSparse(self.weight.activate(fmt, **kw), self.bias)
+
+    def __call__(self, x):
+        """x: (..., d_in) -> (..., d_out): y^T = W^T x^T via spmm."""
+        shape = x.shape
+        xf = x.reshape(-1, shape[-1])  # (T, d_in)
+        y = spmm(self.weight, xf.T).T  # weight stored (d_out, d_in)
+        if self.bias is not None:
+            y = y + self.bias
+        return y.reshape(shape[:-1] + (y.shape[-1],))
+
+    def tree_flatten(self):
+        return (self.weight, self.bias), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1])
+
+    def __repr__(self):
+        return f"LinearSparse<{self.format.name}>{self.weight.shape}"

@@ -1,0 +1,173 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD training path (quadratic-within-chunk, linear-across-chunks,
+``lax.scan`` state recurrence) + O(1)-state cached decode step, which is
+what makes the ``long_500k`` decode cell trivial for SSM archs.
+
+Single B/C group (ngroups=1, the released-model configuration).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import P, rms_norm
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads
+    w = cfg.ssm_conv
+    conv_dim = di + 2 * ds
+    return {
+        # fused in_proj -> [z (di), xBC (di+2ds), dt (nh)]
+        "in_proj": P((d, 2 * di + 2 * ds + nh), ("embed", "mlp")),
+        "conv_w": P((w, conv_dim), (None, "mlp")),
+        "conv_b": P((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": P((nh,), (None,), init="zeros"),
+        "D": P((nh,), (None,), init="ones"),
+        "dt_bias": P((nh,), (None,), init="zeros"),
+        "norm_w": P((di,), ("mlp",), init="ones"),
+        "out_proj": P((di, d), ("mlp", "embed")),
+    }
+
+
+def _segsum_decay(dA):
+    """dA: (..., Q) per-step log-decay -> (..., Q, Q) lower-tri decay matrix
+    L[q, s] = exp(sum_{s < i <= q} dA_i), 0 for s > q."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., q, s)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False):
+    """SSD scan. x: (b,T,H,P); dt: (b,T,H); A: (H,); B,C: (b,T,N).
+    Returns (y (b,T,H,P), final_state (b,H,N,P)). f32 internal.
+
+    One ``lax.scan`` over chunks: each step does the quadratic intra-chunk
+    work for its own chunk and carries the inter-chunk state. Materialising
+    all chunks' (Q x Q) decay matrices at once — the textbook batched form —
+    costs b*nc*h*Q^2 f32 (~78 TiB for the mamba2 train cell); the scan form
+    is O(b*h*Q^2) per step. Steps are remat'd for the backward.
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+    xc = x.reshape(b, nc, q, h, p).swapaxes(0, 1)
+    dtc = dt.reshape(b, nc, q, h).swapaxes(0, 1)
+    Bc = B.reshape(b, nc, q, n).swapaxes(0, 1)
+    Cc = C.reshape(b, nc, q, n).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def step(hprev, inp):
+        x_i, dt_i, B_i, C_i = jax.tree.map(lambda a: a.astype(jnp.float32), inp)
+        dA = dt_i * A  # (b,q,h) log decay (A negative)
+        dA_cum = jnp.cumsum(dA, axis=1)  # inclusive over q
+        xdt = x_i * dt_i[..., None]
+        # intra-chunk (quadratic within the chunk only)
+        L = _segsum_decay(dA.transpose(0, 2, 1))  # (b,h,q,q)
+        scores = jnp.einsum("bqn,bsn->bqs", C_i, B_i)
+        y_diag = jnp.einsum("bqs,bhqs,bshp->bqhp", scores, L, xdt)
+        # contribution of the carried state
+        in_decay = jnp.exp(dA_cum)  # (b,q,h)
+        y_off = jnp.einsum("bqn,bhnp,bqh->bqhp", C_i, hprev, in_decay)
+        # state update
+        decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)  # (b,q,h)
+        S = jnp.einsum("bsn,bsh,bshp->bhnp", B_i, decay_to_end, xdt)
+        chunk_decay = jnp.exp(dA_cum[:, -1, :])  # (b,h)
+        hnew = hprev * chunk_decay[..., None, None] + S
+        return hnew, (y_diag + y_off).astype(x.dtype)
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    if unroll:
+        ys = []
+        hs = h0
+        for i in range(nc):
+            hs, y_i = step(hs, (xc[i], dtc[i], Bc[i], Cc[i]))
+            ys.append(y_i)
+        y = jnp.stack(ys, 0)
+        hfinal = hs
+    else:
+        hfinal, y = jax.lax.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = y.swapaxes(0, 1).reshape(b, t, h, p)
+    return y.astype(x.dtype), hfinal
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv. xbc: (b,T,C); w: (W,C)."""
+    wlen = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(wlen))
+    return out + bias[None, None, :]
+
+
+def mamba_apply(p, x, cfg, *, return_state: bool = False,
+                unroll: bool = False):
+    """Full-sequence Mamba2 mixer. x: (b,T,d)."""
+    dt_ = x.dtype
+    b, t, d = x.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xBC_raw, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_)))
+    xin, B, C = jnp.split(xBC, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, state = ssd_chunked(xin.reshape(b, t, nh, hd), dt, A, B, C,
+                           cfg.ssm_chunk, unroll=unroll)
+    y = y + xin.reshape(b, t, nh, hd) * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, t, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    if return_state:
+        conv_tail = jnp.pad(
+            xBC_raw, ((0, 0), (max(0, cfg.ssm_conv - 1 - t), 0), (0, 0))
+        )[:, -(cfg.ssm_conv - 1):, :]
+        return out, (conv_tail, state)
+    return out, None
+
+
+def mamba_decode(p, x, conv_state, ssm_state, cfg):
+    """One-token decode. x: (b,1,d); conv_state: (b,W-1,conv_dim);
+    ssm_state: (b,H,N,P). Returns (out, conv_state, ssm_state)."""
+    dt_ = x.dtype
+    b = x.shape[0]
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = (x[:, 0] @ p["in_proj"].astype(dt_))  # (b, ...)
+    z, xBC_new, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+
+    window = jnp.concatenate([conv_state, xBC_new[:, None, :]], axis=1)  # (b,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(dt_)
+    xin, B, C = jnp.split(xBC, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (b,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)  # (b,nh)
+
+    xh = xin.reshape(b, nh, hd).astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    # state <- state * dA + dt * (B outer x)
+    ssm_state = (ssm_state * dA[..., None, None]
+                 + jnp.einsum("bn,bh,bhp->bhnp", Bf, dt, xh))
+    y = jnp.einsum("bn,bhnp->bhp", Cf, ssm_state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    return out, window[:, 1:], ssm_state

@@ -1,0 +1,287 @@
+"""Public model API: init / forward / loss / cache / decode per architecture.
+
+``build_model(cfg)`` returns a ``Model`` with:
+    specs()                      parameter P-spec tree
+    init(key)                    materialized params
+    forward(params, batch)       logits (train/prefill)
+    loss(params, batch)          scalar LM loss (+ MoE aux)
+    init_cache(b, s)             decode cache pytree (abstract via specs)
+    prefill(params, batch)       last-token logits + primed cache
+    decode_step(params, cache, tokens, pos)   one-token serve step
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import spec as spec_mod
+from repro.models import transformer as tfm
+from repro.models.layers import embed_apply, mlp_apply, rms_norm, unembed_apply
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(logits, labels, vocab: int):
+    """Token cross-entropy, f32, ignoring label == -1."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = labels >= 0
+    safe = jnp.clip(labels, 0, vocab - 1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def lm_loss_chunked(unembed_params, x, labels, vocab: int, chunk: int,
+                    unroll: bool = False):
+    """CE without materialising the full (B, S, V) logits: a remat'd scan
+    over sequence chunks bounds peak memory at (B, chunk, V/shards) — the
+    big-vocab archs (256k) cannot afford the full tensor in HBM."""
+    from repro.models.layers import unembed_apply
+    from repro.models.sharding_ctx import constrain
+
+    b, s, d = x.shape
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)  # (nc, B, c, d)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xi, li = inp
+        logits = constrain(unembed_apply(unembed_params, xi), "logits_chunk")
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        mask = li >= 0
+        safe = jnp.clip(li, 0, vocab - 1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (acc[0] + jnp.sum(nll * mask), acc[1] + jnp.sum(mask)), None
+
+    acc0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if unroll:  # cost-compile path: every chunk visible to cost analysis
+        acc = acc0
+        for i in range(nc):
+            acc, _ = body(acc, (xc[i], lc[i]))
+        tot, cnt = acc
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, acc0, (xc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# Decode bodies
+# ---------------------------------------------------------------------------
+
+
+def _decode_attn_family(params, cache, x, pos, cfg):
+    # Index-based scan: layer params and cache slices are dynamically
+    # indexed inside the body. Feeding the stacked cache through scan-xs
+    # lets XLA hoist the (CPU-lowering) bf16->f32 dot-operand convert of
+    # the WHOLE cache out of the loop — a 20 GiB/device f32 ghost copy on
+    # the qwen decode cell (§Perf). Dynamic indexing pins the convert to
+    # one layer's slice.
+    blocks = params["blocks"]
+    if cfg.n_layers == 0:  # depth-0 cost-compile variant (dryrun c0)
+        return x, cache
+    quant = "k_scale" in cache
+    idx = lambda t, i: jax.lax.dynamic_index_in_dim(t, i, 0, keepdims=False)
+    upd = jax.lax.dynamic_update_index_in_dim
+
+    def body(carry, i):
+        x, c = carry
+        pl = jax.tree.map(lambda a: idx(a, i), blocks)
+        kc, vc = idx(c["k"], i), idx(c["v"], i)
+        scales = (idx(c["k_scale"], i), idx(c["v_scale"], i)) if quant else (None, None)
+        h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+        res = attn.decode_attention(pl["attn"], h, kc, vc, pos, cfg, *scales)
+        out, kc, vc = res[:3]
+        x = x + out
+        h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h2, _ = moe_mod.moe_apply(pl["moe"], h2, cfg)
+        else:
+            h2 = mlp_apply(pl["mlp"], h2, cfg.mlp_act)
+        c = dict(c, k=upd(c["k"], kc, i, 0), v=upd(c["v"], vc, i, 0))
+        if quant:
+            c["k_scale"] = upd(c["k_scale"], res[3], i, 0)
+            c["v_scale"] = upd(c["v_scale"], res[4], i, 0)
+        return (x + h2, c), None
+
+    (x, cache), _ = jax.lax.scan(
+        body, (x, cache), jnp.arange(cfg.n_layers, dtype=jnp.int32))
+    return x, cache
+
+
+def _decode_ssm_family(params, cache, x, pos, cfg):
+    def body(x, layer):
+        pl, conv, ssm = layer
+        h = rms_norm(x, pl["ln"], cfg.norm_eps)
+        out, conv, ssm = m2.mamba_decode(pl["mixer"], h, conv, ssm, cfg)
+        return x + out, (conv, ssm)
+
+    x, (conv, ssm) = jax.lax.scan(body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+    return x, {"conv": conv, "ssm": ssm}
+
+
+def _decode_hybrid(params, cache, x, pos, cfg):
+    g = cfg.attn_every
+    ng = cfg.n_layers // g
+    grouped = jax.tree.map(lambda a: a.reshape((ng, g) + a.shape[1:]),
+                           params["blocks"])
+    conv_g = cache["conv"].reshape((ng, g) + cache["conv"].shape[1:])
+    ssm_g = cache["ssm"].reshape((ng, g) + cache["ssm"].shape[1:])
+    shared = params["shared_attn"]
+    dcfg = tfm._as_dense(cfg)
+
+    def group(x, layer):
+        pg, conv, ssm, kc, vc = layer
+
+        def inner(x, l):
+            pl, cv, sm = l
+            h = rms_norm(x, pl["ln"], cfg.norm_eps)
+            out, cv, sm = m2.mamba_decode(pl["mixer"], h, cv, sm, cfg)
+            return x + out, (cv, sm)
+
+        x, (conv, ssm) = jax.lax.scan(inner, x, (pg, conv, ssm))
+        h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+        out, kc, vc = attn.decode_attention(shared["attn"], h, kc, vc, pos, dcfg)
+        x = x + out
+        h2 = rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(shared["mlp"], h2, cfg.mlp_act)
+        return x, (conv, ssm, kc, vc)
+
+    x, (conv, ssm, k, v) = jax.lax.scan(group, x, (grouped, conv_g, ssm_g,
+                                                   cache["k"], cache["v"]))
+    return x, {"conv": conv.reshape(cache["conv"].shape),
+               "ssm": ssm.reshape(cache["ssm"].shape), "k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Model bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- params -----------------------------------------------------------
+    def specs(self, param_dtype=jnp.float32) -> dict:
+        s = tfm.model_specs(self.cfg)
+        if param_dtype != jnp.float32:
+            s = spec_mod.cast_dtype(s, param_dtype)
+        return s
+
+    def init(self, key, param_dtype=jnp.float32) -> dict:
+        return spec_mod.init_params(self.specs(param_dtype), key)
+
+    def abstract_params(self, param_dtype=jnp.float32) -> dict:
+        return spec_mod.abstract_params(self.specs(param_dtype))
+
+    def logical_axes(self) -> dict:
+        return spec_mod.logical_axes(self.specs())
+
+    def n_params(self) -> int:
+        return spec_mod.param_count(self.specs())
+
+    # -- training ----------------------------------------------------------
+    def forward(self, params, batch, **kw):
+        return tfm.forward(params, batch, self.cfg, **kw)
+
+    def loss(self, params, batch, ce_chunk: int = 1024, **kw):
+        cfg = self.cfg
+        labels = batch["labels"]
+        s = labels.shape[1]
+        # chunk the CE when the full (B,S,V) logits tensor is HBM-hostile
+        if s % max(1, ce_chunk) == 0 and s // ce_chunk > 1 \
+                and s * cfg.padded_vocab > 2 ** 27:
+            x, aux = tfm.forward(params, batch, cfg, logits_mode="none", **kw)
+            ce = lm_loss_chunked(params["unembed"], x, labels,
+                                 cfg.padded_vocab, ce_chunk,
+                                 unroll=kw.get("unroll", False))
+            return ce + 0.01 * aux
+        logits, aux = tfm.forward(params, batch, cfg, **kw)
+        return lm_loss(logits, labels, cfg.padded_vocab) + 0.01 * aux
+
+    # -- serving -----------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                    kv_quant: bool = False) -> dict:
+        """``kv_quant=True``: int8 k/v + bf16 per-(token, head) scales —
+        4x smaller cache (how MHA-40 x 32k fits HBM; §Perf)."""
+        cfg = self.cfg
+        out: Dict[str, Any] = {}
+        if cfg.family in ("dense", "moe", "vlm"):
+            kv = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+            if kv_quant:
+                out = {"k": jax.ShapeDtypeStruct(kv, jnp.int8),
+                       "v": jax.ShapeDtypeStruct(kv, jnp.int8),
+                       "k_scale": jax.ShapeDtypeStruct(kv[:-1], jnp.bfloat16),
+                       "v_scale": jax.ShapeDtypeStruct(kv[:-1], jnp.bfloat16)}
+            else:
+                out = {"k": jax.ShapeDtypeStruct(kv, dtype),
+                       "v": jax.ShapeDtypeStruct(kv, dtype)}
+        elif cfg.family == "ssm":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            out = {"conv": jax.ShapeDtypeStruct(
+                       (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+                   "ssm": jax.ShapeDtypeStruct(
+                       (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                        cfg.ssm_head_dim), jnp.float32)}
+        elif cfg.family == "hybrid":
+            ng = cfg.n_layers // cfg.attn_every
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            kv = (ng, batch, max_len, cfg.n_kv, cfg.hd)
+            out = {"conv": jax.ShapeDtypeStruct(
+                       (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+                   "ssm": jax.ShapeDtypeStruct(
+                       (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                        cfg.ssm_head_dim), jnp.float32),
+                   "k": jax.ShapeDtypeStruct(kv, dtype),
+                   "v": jax.ShapeDtypeStruct(kv, dtype)}
+        else:
+            raise ValueError(f"{cfg.family} has no decode cache")
+        return out
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_quant: bool = False) -> dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(batch, max_len, dtype, kv_quant))
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B,) int32; pos: (B,) write positions. -> (logits, cache)."""
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        x = embed_apply(params["embed"], tokens, dtype)[:, None, :]
+        if cfg.family in ("dense", "moe", "vlm"):
+            x, cache = _decode_attn_family(params, cache, x, pos, cfg)
+        elif cfg.family == "ssm":
+            x, cache = _decode_ssm_family(params, cache, x, pos, cfg)
+        elif cfg.family == "hybrid":
+            x, cache = _decode_hybrid(params, cache, x, pos, cfg)
+        else:
+            raise ValueError(cfg.family)
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = unembed_apply(params["unembed"], x)[:, 0]
+        return logits, cache
+
+    def prefill(self, params, batch, **kw):
+        """Prefill forward: last-token logits (cache priming is decode-side
+        via repeated decode_step in serve.py; the dry-run lowers this)."""
+        return tfm.forward(params, batch, self.cfg, logits_mode="last",
+                           remat=False, **kw)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

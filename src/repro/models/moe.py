@@ -1,0 +1,174 @@
+"""Mixture-of-Experts layer with *dynamic-format* dispatch (DESIGN.md §4).
+
+The token->expert dispatch/combine operator IS a dynamic sparse matrix
+(one nonzero per (token, routed expert) pair). Three interchangeable
+implementations — selectable at runtime, auto-tunable, same results:
+
+  dense  one-hot einsum dispatch (reference; O(T*E*C) memory — smoke only)
+  sort   sort/scatter dispatch (production path: static shapes, EP-friendly)
+  coo    the dispatch matrix built literally as a repro.core COO container
+         and applied with the library's spmm — the paper's technique
+         integrated into the model stack.
+
+All paths are capacity-based (static shapes): per-expert capacity
+C = ceil(T * top_k / E * capacity_factor); overflow tokens are dropped
+(standard practice) and the drop fraction is an auxiliary metric.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import P, mlp_apply, mlp_specs
+
+
+def moe_specs(cfg) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = {
+        "router": P((d, e), ("embed", None), init="small_normal"),
+        "experts": {
+            "gate": P((e, d, ff), ("expert", "embed", "mlp"), fan_in_dims=(1,)),
+            "up": P((e, d, ff), ("expert", "embed", "mlp"), fan_in_dims=(1,)),
+            "down": P((e, ff, d), ("expert", "mlp", "embed"), fan_in_dims=(1,)),
+        },
+    }
+    for i in range(cfg.n_shared_experts):
+        s[f"shared_{i}"] = mlp_specs(d, ff, "swiglu")
+    return s
+
+
+def _route(p, x, cfg):
+    """Router: top-k gates (renormalised) + flat assignment table."""
+    t = x.shape[0]
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # aux load-balance loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((cfg.n_experts,)).at[idx.reshape(-1)].add(1.0) / (t * cfg.top_k)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _capacity(cfg, t: int) -> int:
+    c = int(t * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)
+
+
+def _expert_ffn(pe, xe, dtype):
+    """Batched expert SwiGLU: xe (E, C, d) -> (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, pe["gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, pe["up"].astype(dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, pe["down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# dispatch impls
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_dense(p, x, gates, idx, cfg):
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(cfg, t)
+    # position of each assignment within its expert
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (T, k, E)
+    pos = jnp.cumsum(onehot.reshape(t * k, e), axis=0).reshape(t, k, e) - 1
+    pos = jnp.sum(pos * onehot, axis=-1)  # (T, k)
+    keep = pos < c
+    disp = jnp.einsum("tke,tkc->tec", jax.nn.one_hot(idx, e, dtype=x.dtype) * keep[..., None],
+                      jax.nn.one_hot(pos, c, dtype=x.dtype))
+    xe = jnp.einsum("tec,td->ecd", disp, x)
+    ye = _expert_ffn(p["experts"], xe, x.dtype)
+    comb = jnp.einsum("tke,tkc,tk->tec", jax.nn.one_hot(idx, e, dtype=x.dtype),
+                      jax.nn.one_hot(pos, c, dtype=x.dtype) * keep[..., None],
+                      gates.astype(x.dtype))
+    return jnp.einsum("tec,ecd->td", comb, ye)
+
+
+def _assignments(x, gates, idx, cfg):
+    """Shared sort-based symbolic step: slot/token/gate per kept assignment."""
+    t = x.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(cfg, t)
+    eid = idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(eid, stable=True)
+    sorted_eid = eid[order]
+    counts = jnp.bincount(sorted_eid, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_eid].astype(jnp.int32)
+    keep = rank < c
+    slot = jnp.where(keep, sorted_eid * c + rank, e * c)  # overflow -> drop row
+    token = order // k
+    gate = gates.reshape(-1)[order]
+    return slot, token, gate, keep, c
+
+
+def _dispatch_sort(p, x, gates, idx, cfg):
+    from repro.models.sharding_ctx import constrain
+    t, d = x.shape
+    e = cfg.n_experts
+    slot, token, gate, keep, c = _assignments(x, gates, idx, cfg)
+    xe = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(x[token])
+    # EP anchor: keep the dispatched buffer expert-sharded (and the batch
+    # dim, added by vmap, data-sharded) — without it GSPMD replicates the
+    # full (B, E*C, d) buffer on the 3-axis multipod mesh (§Perf).
+    xe = constrain(xe, "expert_rows")
+    ye = _expert_ffn(p["experts"], xe[:-1].reshape(e, c, d), x.dtype).reshape(e * c, d)
+    ye = constrain(ye, "expert_rows")
+    contrib = ye[jnp.clip(slot, 0, e * c - 1)] * (gate * keep)[:, None].astype(x.dtype)
+    return jnp.zeros((t, d), x.dtype).at[token].add(contrib)
+
+
+def _dispatch_coo(p, x, gates, idx, cfg):
+    """Dispatch through the paper's library: a COO DynamicMatrix of shape
+    (E*C, T) applied with repro.core.spmm (and its transpose to combine)."""
+    from repro.core.formats import COO
+    from repro.core.ops import spmm
+
+    t, d = x.shape
+    e = cfg.n_experts
+    slot, token, gate, keep, c = _assignments(x, gates, idx, cfg)
+    live = keep.astype(x.dtype)
+    disp = COO(row=jnp.clip(slot, 0, e * c - 1).astype(jnp.int32),
+               col=token.astype(jnp.int32),
+               data=live, shape=(e * c, t), nnz=int(slot.shape[0]))
+    xe = spmm(disp, x)  # (E*C, d)
+    ye = _expert_ffn(p["experts"], xe.reshape(e, c, d), x.dtype).reshape(e * c, d)
+    comb = COO(row=token.astype(jnp.int32),
+               col=jnp.clip(slot, 0, e * c - 1).astype(jnp.int32),
+               data=(gate * keep).astype(x.dtype), shape=(t, e * c),
+               nnz=int(slot.shape[0]))
+    return spmm(comb, ye)
+
+
+DISPATCH = {"dense": _dispatch_dense, "sort": _dispatch_sort, "coo": _dispatch_coo}
+
+
+def moe_apply(p, x, cfg, dispatch: str = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Routing/dispatch is **per sequence** (vmapped over the batch dim): the
+    sort and capacity bookkeeping stay local to each batch row, so under
+    data-parallel sharding every shard routes only its own tokens (GShard/
+    Switch-style local capacity). A single global argsort over all B*S
+    tokens would force GSPMD to all-gather the whole batch (measured:
+    ~108 GiB/device on the deepseek prefill cell; see EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    impl = DISPATCH[dispatch or cfg.moe_dispatch]
+
+    def per_row(xr):
+        gates, idx, aux = _route(p, xr, cfg)
+        return impl(p, xr, gates, idx, cfg), aux
+
+    y, aux = jax.vmap(per_row)(x)
+    xf = x.reshape(b * s, d)
+    yf = y.reshape(b * s, d)
+    for i in range(cfg.n_shared_experts):
+        yf = yf + mlp_apply(p[f"shared_{i}"], xf, "swiglu")
+    return yf.reshape(b, s, d), jnp.mean(aux)

@@ -1,0 +1,88 @@
+"""Parameter-spec system: single source of truth for shapes, dtypes,
+logical sharding axes, and initializers.
+
+Every model family defines a nested dict of ``P`` leaves; ``init_params``
+materializes arrays from RNG, ``abstract_params`` produces
+ShapeDtypeStructs (for the dry-run), and ``logical_axes`` the parallel tree
+of logical-axis tuples consumed by launch/sharding.py.
+
+Logical axes vocabulary (mapped to mesh axes by sharding rules):
+  "vocab"   embedding/unembedding vocabulary dim
+  "embed"   d_model dim
+  "mlp"     ffn hidden dim
+  "heads"   attention heads * head_dim fused dim
+  "kv"      kv heads * head_dim fused dim
+  "expert"  MoE expert dim
+  "layers"  stacked-scan layer dim (never sharded)
+  None      replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter spec leaf."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    dtype: jnp.dtype = jnp.float32
+    fan_in_dims: Tuple[int, ...] = ()  # dims to scale 1/sqrt(fan_in) over
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(spec: P, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = 1
+    for d in (spec.fan_in_dims or range(len(spec.shape) - 1)):
+        fan_in *= spec.shape[d]
+    scale = 1.0 / math.sqrt(max(1, fan_in))
+    if spec.init == "small_normal":
+        scale *= 0.1
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(specs, key) -> dict:
+    """Materialize a params pytree from a spec tree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs) -> dict:
+    """ShapeDtypeStruct tree — used by .lower() in the dry-run (no alloc)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+                        is_leaf=is_spec)
+
+
+def logical_axes(specs) -> dict:
+    """Parallel tree of logical-axis tuples."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def cast_dtype(specs, dtype) -> dict:
+    """Spec tree with every floating leaf recast (e.g. bf16 inference)."""
+    return jax.tree.map(
+        lambda s: dataclasses.replace(s, dtype=dtype) if jnp.issubdtype(s.dtype, jnp.floating) else s,
+        specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec))

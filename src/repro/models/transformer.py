@@ -1,0 +1,223 @@
+"""Model assembly: scan-over-layers stacks for every assigned family.
+
+One generic decoder/encoder runtime covers dense / moe / audio / vlm; the
+ssm family stacks Mamba2 blocks; hybrid (zamba2) interleaves Mamba2 groups
+with one *shared* attention block (parameters reused across applications).
+
+Layers are stacked (leading ``layers`` dim) and driven by ``lax.scan`` so
+HLO size and compile time are independent of depth — essential for the
+512-device dry-run. Remat (activation checkpointing) wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models.layers import (P, embed_apply, embed_specs, mlp_apply,
+                                 mlp_specs, rms_norm, unembed_apply,
+                                 unembed_specs)
+from repro.models.sharding_ctx import constrain
+from repro.models.spec import P as PS
+
+
+def _stack_specs(specs: dict, n: int) -> dict:
+    """Prefix every spec in the tree with a ``layers`` dim of size n."""
+    import dataclasses as dc
+    return jax.tree.map(
+        lambda s: dc.replace(s, shape=(n,) + s.shape, axes=("layers",) + s.axes),
+        specs, is_leaf=lambda x: isinstance(x, PS))
+
+
+# ---------------------------------------------------------------------------
+# Block bodies (one layer each)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_specs(cfg) -> dict:
+    s = {
+        "ln1": P((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn.attn_specs(cfg),
+        "ln2": P((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if cfg.family == "moe":
+        s["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    return s
+
+
+def _attn_block(p, x, cfg, *, causal, positions=None, q_chunk, kv_chunk,
+                unroll=False):
+    h, _ = attn.attention_block(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                cfg, causal=causal, positions=positions,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                unroll=unroll)
+    x = x + h
+    hin = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h, aux = moe_mod.moe_apply(p["moe"], hin, cfg)
+    else:
+        h, aux = mlp_apply(p["mlp"], hin, cfg.mlp_act), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def _mamba_block_specs(cfg) -> dict:
+    return {"ln": P((cfg.d_model,), ("embed",), init="ones"),
+            "mixer": m2.mamba_specs(cfg)}
+
+
+def _mamba_block(p, x, cfg, *, return_state=False, unroll=False):
+    h, state = m2.mamba_apply(p["mixer"], rms_norm(x, p["ln"], cfg.norm_eps),
+                              cfg, return_state=return_state, unroll=unroll)
+    return x + h, state
+
+
+# ---------------------------------------------------------------------------
+# Specs per family
+# ---------------------------------------------------------------------------
+
+
+def model_specs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    s: Dict[str, Any] = {"final_ln": P((d,), ("embed",), init="ones")}
+
+    if cfg.frontend == "audio":
+        s["frontend"] = {"proj": P((cfg.frontend_dim, d), (None, "embed"))}
+    elif cfg.frontend == "vision":
+        s["frontend"] = {"proj": P((cfg.frontend_dim, d), (None, "embed"))}
+        s["embed"] = embed_specs(v, d)
+    else:
+        s["embed"] = embed_specs(v, d)
+
+    if not cfg.encoder_only or cfg.family == "audio":
+        s["unembed"] = unembed_specs(d, v)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        s["blocks"] = _stack_specs(_attn_block_specs(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        s["blocks"] = _stack_specs(_mamba_block_specs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        s["blocks"] = _stack_specs(_mamba_block_specs(cfg), cfg.n_layers)
+        s["shared_attn"] = _attn_block_specs(
+            _as_dense(cfg))  # one block, reused every attn_every layers
+    else:
+        raise ValueError(cfg.family)
+    return s
+
+
+def _as_dense(cfg):
+    import dataclasses as dc
+    return dc.replace(cfg, family="dense")
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _python_scan(body, carry, stacked, n):
+    for i in range(n):
+        carry, _ = body(carry, jax.tree.map(lambda a: a[i], stacked))
+    return carry
+
+
+def _embed_inputs(params, batch, cfg, dtype):
+    """Token/frontend embedding. Returns (x, positions)."""
+    if cfg.frontend == "audio":
+        x = batch["frames"].astype(dtype) @ params["frontend"]["proj"].astype(dtype)
+    elif cfg.frontend == "vision":
+        pe = batch["patches"].astype(dtype) @ params["frontend"]["proj"].astype(dtype)
+        te = embed_apply(params["embed"], batch["tokens"], dtype)
+        x = jnp.concatenate([pe, te], axis=1)
+    else:
+        x = embed_apply(params["embed"], batch["tokens"], dtype)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    return x, positions
+
+
+def forward(params, batch, cfg, *, remat: bool = True,
+            q_chunk: int = 512, kv_chunk: int = 1024,
+            logits_mode: str = "all", unroll: bool = False):
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    logits_mode: 'all' (training CE) | 'last' (prefill serving) | 'none'.
+    unroll: Python-loop layers + attention kv chunks instead of lax.scan —
+    used by the roofline cost-compiles so XLA cost analysis sees every
+    FLOP (scan bodies are otherwise counted once; see dryrun.py).
+    """
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x, positions = _embed_inputs(params, batch, cfg, dtype)
+    x = constrain(x, "act")
+    causal = not cfg.encoder_only
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(carry, pl):
+            x, aux = carry
+            x, a = _attn_block(pl, x, cfg, causal=causal, positions=positions,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk,
+                               unroll=unroll)
+            return (constrain(x, "act"), aux + a), None
+        body = jax.checkpoint(body) if remat else body
+        carry0 = (x, jnp.zeros((), jnp.float32))
+        if unroll:
+            (x, aux) = _python_scan(body, carry0, params["blocks"], cfg.n_layers)
+        else:
+            (x, aux), _ = jax.lax.scan(body, carry0, params["blocks"])
+    elif cfg.family == "ssm":
+        def body(carry, pl):
+            x, aux = carry
+            x, _ = _mamba_block(pl, x, cfg, unroll=unroll)
+            return (constrain(x, "act"), aux), None
+        body = jax.checkpoint(body) if remat else body
+        carry0 = (x, jnp.zeros((), jnp.float32))
+        if unroll:
+            (x, aux) = _python_scan(body, carry0, params["blocks"], cfg.n_layers)
+        else:
+            (x, aux), _ = jax.lax.scan(body, carry0, params["blocks"])
+    elif cfg.family == "hybrid":
+        g = cfg.attn_every
+        ng = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape((ng, g) + a.shape[1:]), params["blocks"])
+        shared = params["shared_attn"]
+
+        def group_body(carry, pg):
+            x, aux = carry
+            if unroll:
+                # Python loop: every mamba block visible to cost analysis
+                for i in range(g):
+                    x, _ = _mamba_block(jax.tree.map(lambda a: a[i], pg), x,
+                                        cfg, unroll=True)
+            else:
+                def inner(xc, pl):
+                    xc, _ = _mamba_block(pl, xc, cfg)
+                    return xc, None
+                x, _ = jax.lax.scan(inner, x, pg)
+            x, a = _attn_block(shared, x, _as_dense(cfg), causal=causal,
+                               positions=positions, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk, unroll=unroll)
+            return (constrain(x, "act"), aux + a), None
+        group_body = jax.checkpoint(group_body) if remat else group_body
+        carry0 = (x, jnp.zeros((), jnp.float32))
+        if unroll:
+            (x, aux) = _python_scan(group_body, carry0, grouped, ng)
+        else:
+            (x, aux), _ = jax.lax.scan(group_body, carry0, grouped)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if logits_mode == "none":
+        return x, aux
+    if logits_mode == "last":
+        x = x[:, -1:, :]
+    logits = constrain(unembed_apply(params["unembed"], x), "logits")
+    return logits, aux

@@ -1,0 +1,70 @@
+"""AdamW optimizer (built in-tree: no external deps), pytree-generic.
+
+State is a pytree mirroring params (m, v) + step counter; everything is
+shard-friendly (states inherit param shardings — the ZeRO/FSDP layout falls
+out of the sharding rules in launch/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    warmup_steps: int = 100
+    lr_min_ratio: float = 0.1
+    total_steps: int = 10000
+
+    def init(self, params) -> AdamWState:
+        z = lambda t: jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), t)
+        return AdamWState(jnp.zeros((), jnp.int32), z(params), z(params))
+
+    def schedule(self, step):
+        """Linear warmup + cosine decay to lr_min_ratio."""
+        warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(1, self.total_steps - self.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (self.lr_min_ratio + (1 - self.lr_min_ratio) * cos)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        mh = jax.tree.map(lambda mm: mm / (1 - b1 ** step.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - b2 ** step.astype(jnp.float32)), v)
+        lr = self.schedule(step)
+
+        def upd(p, mm, vv):
+            u = mm / (jnp.sqrt(vv) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mh, vh)
+        return new_params, AdamWState(step, m, v)

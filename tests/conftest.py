@@ -1,0 +1,14 @@
+"""Test-session guards.
+
+The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 in
+its OWN process only; tests must run with the default single-device view
+(multi-device tests spawn subprocesses). Fail fast if the env leaks.
+"""
+import os
+
+
+def pytest_configure(config):
+    flags = os.environ.get("XLA_FLAGS", "")
+    assert "xla_force_host_platform_device_count" not in flags, (
+        "XLA_FLAGS device-count override leaked into the test session; "
+        "the dry-run must set it only inside launch/dryrun.py")

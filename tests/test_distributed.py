@@ -1,0 +1,172 @@
+"""Distributed sparse runtime tests.
+
+Multi-device tests run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main pytest
+process keeps its single-device view (dry-run isolation, see dryrun.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Format, hpcg, random_coo
+from repro.core.distributed import (build_dist_matrix, dist_spmv,
+                                    distribute_vector, partition_coo)
+from repro.core.solvers import cg, cg_fixed_iters
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(body: str):
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, %r)
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.core import hpcg, Format
+        from repro.core.distributed import (build_dist_matrix, dist_spmv,
+                                            distribute_vector)
+        from repro.core.solvers import cg
+    """ % os.path.abspath(SRC)) + textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    return res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Partitioner (host logic — no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_partition_local_remote_split():
+    prob = hpcg.generate_problem(4, 4, 8)
+    pc = partition_coo(prob.row, prob.col, prob.val, prob.shape, 4)
+    assert pc.halo_mode == "neighbor"
+    assert pc.hw == 16  # one plane = nx*ny
+    # all entries accounted for
+    total = sum(len(t[0]) for t in pc.local) + sum(len(t[0]) for t in pc.remote)
+    assert total == len(prob.row)
+    # local columns are in-range
+    for (r, c, v) in pc.local:
+        assert (c >= 0).all() and (c < pc.mp).all()
+    for (r, c, v) in pc.remote:
+        assert (c >= 0).all() and (c < 2 * pc.hw).all()
+
+
+def test_partition_requires_divisible():
+    with pytest.raises(ValueError):
+        partition_coo([0], [0], [1.0], (10, 10), 3)
+
+
+def test_partition_irregular_falls_back_to_gather():
+    A = random_coo(0, (64, 64), density=0.2)
+    pc = partition_coo(np.asarray(A.row), np.asarray(A.col), np.asarray(A.data),
+                       (64, 64), 8)
+    assert pc.halo_mode == "gather"
+
+
+# ---------------------------------------------------------------------------
+# Single-device mesh (in-process)
+# ---------------------------------------------------------------------------
+
+def test_dist_spmv_single_shard():
+    mesh = jax.make_mesh((1,), ("rows",))
+    prob = hpcg.generate_problem(4, 4, 4)
+    A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh, "rows",
+                          local_format=Format.DIA, remote_format=Format.COO)
+    x = distribute_vector(np.ones(prob.shape[0], np.float32), mesh, "rows")
+    y = dist_spmv(A, x, mesh)
+    D = np.zeros(prob.shape)
+    np.add.at(D, (prob.row, prob.col), prob.val)
+    np.testing.assert_allclose(np.asarray(y), D @ np.ones(prob.shape[0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cg_single_device():
+    prob = hpcg.generate_problem(6, 6, 6)
+    from repro.core import convert, to_coo
+    A = convert(hpcg.to_coo(prob), Format.CSR)
+    b = jnp.asarray(hpcg.rhs_for_ones(prob))
+    from repro.core import spmv
+    res = cg(lambda v: spmv(A, v), b, tol=1e-7, maxiter=300)
+    np.testing.assert_allclose(np.asarray(res.x), 1.0, rtol=1e-3, atol=1e-3)
+
+
+def test_cg_fixed_iters_runs():
+    prob = hpcg.generate_problem(4, 4, 4)
+    from repro.core import convert, spmv
+    A = convert(hpcg.to_coo(prob), Format.ELL)
+    b = jnp.asarray(hpcg.rhs_for_ones(prob))
+    res = cg_fixed_iters(lambda v: spmv(A, v), b, iters=30)
+    assert np.isfinite(float(res.resnorm))
+
+
+# ---------------------------------------------------------------------------
+# 8-shard SPMD (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,lf,rf", [
+    ("uniform", "CSR", "CSR"),
+    ("uniform", "DIA", "COO"),
+    ("multiformat", "CSR", "CSR"),
+])
+def test_dist_spmv_8shards(mode, lf, rf):
+    out = _run_subprocess(f"""
+        mesh = jax.make_mesh((8,), ("rows",))
+        prob = hpcg.generate_problem(8, 8, 16)
+        D = np.zeros(prob.shape); np.add.at(D, (prob.row, prob.col), prob.val)
+        x_np = np.random.default_rng(0).standard_normal(prob.shape[0]).astype(np.float32)
+        A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
+                              "rows", local_format=Format.{lf},
+                              remote_format=Format.{rf}, mode="{mode}")
+        x = distribute_vector(x_np, mesh, "rows")
+        y = jax.jit(lambda a, v: dist_spmv(a, v, mesh))(A, x)
+        err = abs(np.asarray(y) - D @ x_np).max() / abs(D @ x_np).max()
+        assert err < 1e-5, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_dist_cg_8shards_converges_to_ones():
+    out = _run_subprocess("""
+        mesh = jax.make_mesh((8,), ("rows",))
+        prob = hpcg.generate_problem(8, 8, 16)
+        A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
+                              "rows", local_format=Format.DIA,
+                              remote_format=Format.COO)
+        b = distribute_vector(hpcg.rhs_for_ones(prob), mesh, "rows")
+        res = jax.jit(lambda a, bb: cg(lambda v: dist_spmv(a, v, mesh), bb,
+                                       tol=1e-7, maxiter=300))(A, b)
+        err = abs(np.asarray(res.x) - 1.0).max()
+        assert err < 1e-3, err
+        print("OK", int(res.iters), err)
+    """)
+    assert "OK" in out
+
+
+def test_dist_matches_single_device_result():
+    """Invariant: distribution must not change the math."""
+    out = _run_subprocess("""
+        from repro.core import convert, spmv
+        mesh = jax.make_mesh((8,), ("rows",))
+        prob = hpcg.generate_problem(6, 6, 8)
+        x_np = np.random.default_rng(1).standard_normal(prob.shape[0]).astype(np.float32)
+        A1 = convert(hpcg.to_coo(prob), Format.CSR)
+        y1 = np.asarray(spmv(A1, jnp.asarray(x_np)))
+        A8 = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
+                               "rows", mode="multiformat")
+        y8 = np.asarray(dist_spmv(A8, distribute_vector(x_np, mesh, "rows"), mesh))
+        err = abs(y1 - y8).max() / abs(y1).max()
+        assert err < 1e-5, err
+        print("OK", err)
+    """)
+    assert "OK" in out

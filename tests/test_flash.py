@@ -1,0 +1,84 @@
+"""Flash attention (custom_vjp) vs naive softmax attention: fwd + grads."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flash import flash_attention
+
+RNG = np.random.default_rng(0)
+
+
+def naive(q, k, v, causal=True):
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _mk(b=2, s=128, h=8, kvh=4, d=32, dtype=jnp.float32):
+    q = jnp.asarray(RNG.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, s, kvh, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, s, kvh, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("qc,kc", [(32, 64), (128, 128), (64, 32), (16, 16)])
+def test_flash_forward(causal, qc, kc):
+    q, k, v = _mk()
+    o = flash_attention(q, k, v, causal, qc, kc, False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(naive(q, k, v, causal)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("qc,kc", [(32, 64), (64, 32)])
+def test_flash_grads(causal, qc, kc):
+    q, k, v = _mk()
+
+    def loss_flash(q, k, v):
+        return (flash_attention(q, k, v, causal, qc, kc, False) ** 2).sum()
+
+    def loss_naive(q, k, v):
+        return (naive(q, k, v, causal) ** 2).sum()
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_flash_unroll_matches_scan():
+    q, k, v = _mk()
+    o1 = flash_attention(q, k, v, True, 32, 32, False)
+    o2 = flash_attention(q, k, v, True, 32, 32, True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-5)
+    g1 = jax.grad(lambda q: (flash_attention(q, k, v, True, 32, 32, False) ** 2).sum())(q)
+    g2 = jax.grad(lambda q: (flash_attention(q, k, v, True, 32, 32, True) ** 2).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_bf16():
+    q, k, v = _mk(dtype=jnp.bfloat16)
+    o = flash_attention(q, k, v, True, 32, 64, False)
+    ref = naive(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_flash_mha_no_gqa():
+    q, k, v = _mk(h=4, kvh=4)
+    o = flash_attention(q, k, v, True, 32, 32, False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(naive(q, k, v, True)),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,161 @@
+"""Unit + property tests: containers, conversions, SpMV/SpMM correctness."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BSR, COO, CSR, DIA, ELL, Dense, Format,
+                        banded_coo, bytes_of, convert, coo_from_dense_np,
+                        deep_copy, dense_from_array, extract_diagonal,
+                        random_coo, shallow_copy, spmm, spmv, to_coo,
+                        to_dense_np, update_diagonal)
+
+ALL_FORMATS = [Format.COO, Format.CSR, Format.DIA, Format.ELL, Format.DENSE]
+
+
+def _rand(seed, shape, density=0.08, dtype=jnp.float32):
+    return random_coo(seed, shape, density=density, dtype=dtype)
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+@pytest.mark.parametrize("shape", [(32, 32), (64, 48), (48, 96), (1, 7)])
+def test_convert_roundtrip(fmt, shape):
+    A = _rand(0, shape)
+    D = to_dense_np(A)
+    Af = convert(A, fmt)
+    np.testing.assert_allclose(to_dense_np(Af), D, rtol=1e-6, atol=1e-6)
+    # back through the COO proxy
+    np.testing.assert_allclose(to_dense_np(to_coo(Af)), D, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+@pytest.mark.parametrize("shape", [(32, 32), (64, 48), (48, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_spmv_matches_dense(fmt, shape, dtype):
+    A = _rand(1, shape, dtype=jnp.float32)
+    D = to_dense_np(A).astype(np.float64)
+    x = np.random.default_rng(2).standard_normal(shape[1]).astype(np.float32)
+    y = spmv(convert(A, fmt), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), D @ x, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_spmm_matches_dense(fmt):
+    A = _rand(3, (48, 40))
+    D = to_dense_np(A)
+    B = np.random.default_rng(4).standard_normal((40, 12)).astype(np.float32)
+    Y = spmm(convert(A, fmt), jnp.asarray(B))
+    np.testing.assert_allclose(np.asarray(Y), D @ B, rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_roundtrip_and_spmv():
+    A = _rand(5, (256, 128), density=0.1)
+    Ab = convert(A, Format.BSR, block_size=64)
+    D = to_dense_np(A)
+    np.testing.assert_allclose(to_dense_np(Ab), D, rtol=1e-6, atol=1e-6)
+    x = np.random.default_rng(6).standard_normal(128).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(spmv(Ab, jnp.asarray(x))), D @ x,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_requires_block_aligned():
+    A = _rand(7, (100, 60))
+    with pytest.raises(ValueError):
+        convert(A, Format.BSR, block_size=64)
+
+
+def test_dia_banded_exact():
+    A = banded_coo((128, 128), [-16, -1, 0, 1, 16])
+    Ad = convert(A, Format.DIA)
+    assert Ad.ndiag == 5
+    np.testing.assert_allclose(to_dense_np(Ad), to_dense_np(A))
+
+
+def test_capacity_padding_is_inert():
+    A = random_coo(8, (32, 32), density=0.1, capacity=500)
+    D = to_dense_np(A)
+    x = np.random.default_rng(9).standard_normal(32).astype(np.float32)
+    for fmt in ALL_FORMATS:
+        y = spmv(convert(A, fmt), jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(y), D @ x, rtol=1e-4, atol=1e-4,
+                                   err_msg=str(fmt))
+
+
+def test_copy_semantics():
+    A = _rand(10, (16, 16))
+    S = shallow_copy(A)
+    assert S.data is A.data  # aliasing, zero cost
+    Dc = deep_copy(A)
+    assert Dc.data is not A.data
+    np.testing.assert_array_equal(np.asarray(Dc.data), np.asarray(A.data))
+    assert bytes_of(A) > 0
+
+
+def test_diag_update_extract():
+    A = _rand(11, (32, 32))
+    # ensure the diagonal exists in the pattern
+    D = to_dense_np(A)
+    np.fill_diagonal(D, 3.0)
+    A = coo_from_dense_np(D)
+    for fmt in ALL_FORMATS:
+        Af = convert(A, fmt)
+        d = extract_diagonal(Af)
+        np.testing.assert_allclose(np.asarray(d), np.diagonal(D), rtol=1e-6)
+        Au = update_diagonal(Af, jnp.full((32,), 7.0))
+        np.testing.assert_allclose(np.asarray(extract_diagonal(Au)),
+                                   np.full(32, 7.0), rtol=1e-6, err_msg=str(fmt))
+
+
+def test_spmv_under_jit():
+    A = _rand(12, (64, 64))
+    x = jnp.ones((64,))
+    f = jax.jit(lambda a, v: spmv(a, v))
+    for fmt in ALL_FORMATS:
+        Af = convert(A, fmt)
+        np.testing.assert_allclose(np.asarray(f(Af, x)),
+                                   to_dense_np(A) @ np.ones(64), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests (hypothesis): system invariants
+# ---------------------------------------------------------------------------
+
+@st.composite
+def sparse_mats(draw):
+    m = draw(st.integers(4, 40))
+    n = draw(st.integers(4, 40))
+    density = draw(st.floats(0.02, 0.4))
+    seed = draw(st.integers(0, 2**16))
+    return random_coo(seed, (m, n), density=density)
+
+
+@given(sparse_mats(), st.sampled_from(ALL_FORMATS))
+@settings(max_examples=25, deadline=None)
+def test_prop_conversion_preserves_matrix(A, fmt):
+    """Invariant: convert() never changes the represented matrix."""
+    np.testing.assert_allclose(to_dense_np(convert(A, fmt)), to_dense_np(A),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(sparse_mats(), st.sampled_from(ALL_FORMATS), st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_prop_spmv_format_invariant(A, fmt, xseed):
+    """Invariant: SpMV result is independent of the storage format."""
+    x = np.random.default_rng(xseed).standard_normal(A.shape[1]).astype(np.float32)
+    y_coo = np.asarray(spmv(A, jnp.asarray(x)))
+    y_fmt = np.asarray(spmv(convert(A, fmt), jnp.asarray(x)))
+    np.testing.assert_allclose(y_fmt, y_coo, rtol=1e-4, atol=1e-4)
+
+
+@given(sparse_mats())
+@settings(max_examples=15, deadline=None)
+def test_prop_spmv_linearity(A):
+    """Invariant: A(ax + by) == a Ax + b Ay (exercises padding safety)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(A.shape[1]).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(A.shape[1]).astype(np.float32))
+    lhs = np.asarray(spmv(A, 2.0 * x + 3.0 * y))
+    rhs = 2.0 * np.asarray(spmv(A, x)) + 3.0 * np.asarray(spmv(A, y))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Format, banded_coo, convert, random_coo, to_dense_np
+from repro.kernels import ops as kops
+from repro.kernels.ref import bsr_spmm_ref, dia_spmv_ref, ell_spmv_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# DIA SpMV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,offsets", [
+    ((64, 64), [0]),
+    ((128, 128), [-1, 0, 1]),
+    ((300, 300), [-17, -3, 0, 3, 17]),
+    ((1000, 1000), [-96, -32, -1, 0, 1, 32, 96]),
+    ((128, 200), [0, 64, 150]),          # rectangular, remote-part shape
+    ((200, 128), [-150, -10, 0]),        # tall rectangular
+    ((513, 513), [-5, 0, 5]),            # non-tile-aligned rows
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dia_kernel_sweep(shape, offsets, dtype):
+    A = convert(banded_coo(shape, offsets, dtype=dtype), Format.DIA)
+    x = jnp.asarray(RNG.standard_normal(shape[1]), dtype=dtype)
+    y_k = kops.dia_spmv(A, x)
+    y_r = dia_spmv_ref(A.offsets, A.data, x, shape[1])
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("tm", [128, 256, 512])
+def test_dia_kernel_tile_sizes(tm):
+    A = convert(banded_coo((700, 700), [-30, 0, 30]), Format.DIA)
+    x = jnp.asarray(RNG.standard_normal(700).astype(np.float32))
+    y_k = kops.dia_spmv(A, x, tm=tm)
+    np.testing.assert_allclose(np.asarray(y_k), to_dense_np(A) @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ELL SpMV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,density", [
+    ((64, 64), 0.1), ((200, 150), 0.08), ((513, 400), 0.05), ((1024, 1024), 0.01),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ell_kernel_sweep(shape, density, dtype):
+    A = convert(random_coo(7, shape, density=density, dtype=dtype), Format.ELL)
+    x = jnp.asarray(RNG.standard_normal(shape[1]), dtype=dtype)
+    y_k = kops.ell_spmv(A, x)
+    y_r = ell_spmv_ref(A.cols, A.data, x)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# BSR SpMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,bs,kb", [
+    ((256, 256), 64, 64), ((256, 384), 64, 96), ((512, 256), 128, 128),
+    ((384, 384), 128, 40),   # K not a tile multiple
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_kernel_sweep(shape, bs, kb, dtype):
+    A = convert(random_coo(9, shape, density=0.15, dtype=dtype), Format.BSR,
+                block_size=bs)
+    B = jnp.asarray(RNG.standard_normal((shape[1], kb)), dtype=dtype)
+    y_k = kops.bsr_spmm(A, B)
+    y_r = bsr_spmm_ref(A.indptr, A.indices, A.data, B, shape[0])
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+
+
+def test_bsr_empty_row_fallback():
+    """Kernel precondition violated -> wrapper must fall back, stay correct."""
+    # only one nonzero => most block rows empty
+    A = convert(banded_coo((256, 256), [0], fill=[2.0]), Format.BSR, block_size=64)
+    import dataclasses
+    # carve out an empty block row by zeroing indptr ranges is fiddly; instead
+    # build from a matrix with an all-zero top half
+    import numpy as _np
+    D = _np.zeros((256, 256), _np.float32)
+    D[128:, :] = _np.asarray(to_dense_np(A))[128:, :]
+    from repro.core import coo_from_dense_np
+    Ab = convert(coo_from_dense_np(D), Format.BSR, block_size=64)
+    B = jnp.asarray(RNG.standard_normal((256, 32)).astype(np.float32))
+    y = kops.bsr_spmm(Ab, B)
+    np.testing.assert_allclose(np.asarray(y), D @ np.asarray(B), rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_spmv_path():
+    A = convert(random_coo(11, (256, 256), density=0.2), Format.BSR, block_size=64)
+    x = jnp.asarray(RNG.standard_normal(256).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(kops.bsr_spmv(A, x)),
+                               to_dense_np(A) @ np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# backend="pallas" dispatch through the core API
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", [Format.DIA, Format.ELL])
+def test_core_pallas_backend(fmt):
+    from repro.core import spmv
+    A = convert(banded_coo((256, 256), [-4, 0, 4]), fmt)
+    x = jnp.asarray(RNG.standard_normal(256).astype(np.float32))
+    y_p = spmv(A, x, backend="pallas")
+    y_r = spmv(A, x, backend="ref")
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget_fallback():
+    """x too large for VMEM residency -> ref fallback, still correct."""
+    n = 2_000_000  # 8 MB f32 > budget
+    A = convert(banded_coo((1024, n), [0, 100]), Format.DIA)
+    x = jnp.ones((n,), jnp.float32)
+    y = kops.dia_spmv(A, x)
+    assert np.isfinite(np.asarray(y)).all()

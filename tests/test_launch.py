@@ -1,0 +1,160 @@
+"""Launch-layer units: sharding rules, shape cells, HLO collective parser."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, input_specs, token_input_specs
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes, flat_axes, make_mesh
+from repro.models import build_model
+from repro.models.spec import P as SpecP
+
+
+def _mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_to_pspec_divisibility_fallback():
+    mesh = make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    s = SpecP((40, 128), ("heads", "embed"))  # 40 % 16 != 0 -> replicate
+    ps = shd.spec_to_pspec(s, FakeMesh(), shd.TRAIN_RULES)
+    assert ps == P(None, "data")
+    s = SpecP((5120, 27392), ("embed", "mlp"))
+    ps = shd.spec_to_pspec(s, FakeMesh(), shd.TRAIN_RULES)
+    assert ps == P("data", "model")
+
+
+def test_spec_to_pspec_no_axis_reuse():
+    class FakeMesh:
+        shape = {"data": 4, "model": 4}
+        axis_names = ("data", "model")
+
+    s = SpecP((16, 16, 16), ("mlp", "heads", "kv"))  # all map to 'model'
+    ps = shd.spec_to_pspec(s, FakeMesh(), shd.TRAIN_RULES)
+    assert list(ps).count("model") == 1
+
+
+def test_batch_pspec_divisibility():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    sp = shd.batch_pspec(FakeMesh(), {
+        "tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32),
+        "odd": jax.ShapeDtypeStruct((3, 128), jnp.int32)})
+    assert sp["tokens"][0] == "data"
+    assert sp["odd"][0] is None
+
+
+def test_cache_pspec_kv_vs_seq():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    # kv divisible -> head sharding
+    specs = {"k": jax.ShapeDtypeStruct((24, 128, 4096, 32, 64), jnp.bfloat16)}
+    ps = shd.cache_pspec(FakeMesh(), specs, None)
+    assert ps["k"][3] == "model" and ps["k"][2] is None
+    # kv NOT divisible -> sequence sharding
+    specs = {"k": jax.ShapeDtypeStruct((64, 128, 32768, 40, 128), jnp.bfloat16)}
+    ps = shd.cache_pspec(FakeMesh(), specs, None)
+    assert ps["k"][2] == "model" and ps["k"][3] is None
+
+
+def test_mesh_helpers():
+    m = make_mesh((1, 1), ("data", "model"))  # single-device pytest view
+    assert dp_axes(m) == ("data",)
+    assert flat_axes(m) == ("data", "model")
+
+
+def test_input_specs_all_cells():
+    """Every non-skip (arch, shape) must produce well-formed abstract
+    inputs (the dry-run's precondition)."""
+    from repro.configs import list_archs, skip_reason
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if skip_reason(cfg, shape):
+                continue
+            spec = input_specs(cfg, shape)
+            leaves = jax.tree.leaves(spec)
+            assert leaves, (arch, shape)
+            for l in leaves:
+                assert isinstance(l, jax.ShapeDtypeStruct)
+                assert all(d > 0 for d in l.shape)
+
+
+def test_token_input_specs_shapes():
+    cfg = get_config("internvl2_26b")
+    cell = SHAPES["train_4k"]
+    spec = token_input_specs(cfg, cell, with_labels=True)
+    # patches + text tokens == seq_len total
+    assert spec["patches"].shape == (256, cfg.n_patches, cfg.frontend_dim)
+    assert spec["tokens"].shape == (256, 4096 - cfg.n_patches)
+    assert spec["labels"].shape == (256, 4096)
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collective_bytes
+    hlo = """
+  %ag = bf16[16,4096,5120]{2,1,0} all-gather(bf16[1,4096,5120]{2,1,0} %x), dims={0}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %cp = f32[64]{0} collective-permute(f32[64]{0} %z), source_target_pairs={{0,1}}
+  %done = f32[8]{0} all-reduce-done(f32[8]{0} %w)
+  %notacoll = f32[2]{0} add(f32[2]{0} %a, f32[2]{0} %b)
+"""
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 4096 * 5120 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["collective-permute"] == 64 * 4
+    assert "total" in out
+
+
+def test_accum_steps_policy():
+    from repro.launch.dryrun import accum_steps
+    from repro.configs.shapes import SHAPES
+    cell = SHAPES["train_4k"]
+    assert accum_steps(get_config("command_r_plus_104b"), cell) == 16
+    assert accum_steps(get_config("qwen1_5_32b"), cell) == 16
+    assert accum_steps(get_config("stablelm_1_6b"), cell) == 4
+    # cap: batch 256 / dp 16 = 16
+    assert accum_steps(get_config("llama4_scout_17b_a16e"), cell) <= 16
+
+
+def test_int8_cache_specs():
+    m = build_model(get_config("qwen1_5_32b"))
+    cs = m.cache_specs(8, 128, kv_quant=True)
+    assert cs["k"].dtype == jnp.int8
+    assert cs["k_scale"].shape == cs["k"].shape[:-1]
+    cs = m.cache_specs(8, 128)
+    assert "k_scale" not in cs
+
+
+def test_int8_decode_matches_forward():
+    """int8 KV cache: decode within 2% of full-precision forward."""
+    import dataclasses
+    rng = np.random.default_rng(0)
+    cfg = dataclasses.replace(get_config("stablelm_1_6b", smoke=True),
+                              dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    B, S = 2, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    fwd, _ = m.forward(params, {"tokens": toks}, remat=False, q_chunk=4, kv_chunk=4)
+    cache = m.init_cache(B, S, kv_quant=True)
+    step = jax.jit(m.decode_step)
+    errs = []
+    for i in range(S):
+        lg, cache = step(params, cache, toks[:, i], jnp.full((B,), i, jnp.int32))
+        errs.append(np.abs(np.asarray(lg) - np.asarray(fwd[:, i])).max())
+    rel = max(errs) / np.abs(np.asarray(fwd)).max()
+    assert rel < 0.02, rel
