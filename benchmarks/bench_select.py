@@ -1,0 +1,89 @@
+"""Selection-mode shoot-out: ml vs analytic vs cached vs profile.
+
+Two questions the tuning subsystem must answer well:
+
+* quality  — how close is each mode's pick to the profiling oracle, as the
+  ratio of the chosen format's SpMV time to the best format's SpMV time
+  (1.0 = picked the winner)?
+* overhead — how long does selection itself take? This is what a restart
+  pays per shard: profile reruns every candidate; ml is one feature pass +
+  tree walk; a warm cache is a feature pass + dict hit.
+
+Run: PYTHONPATH=src python benchmarks/bench_select.py [--samples 18]
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import convert, spmv
+from repro.tuning import FormatPolicy, SelectionCache, profile_select, time_fn
+from repro.tuning.corpus import DEFAULT_CANDIDATES, FAMILIES, make_matrix
+
+MODES = ("analytic", "ml", "cached", "profile")
+
+
+def run(samples: int = 18, seed: int = 42, iters: int = 8):
+    rng = np.random.default_rng(seed)
+    mats = [make_matrix(FAMILIES[i % len(FAMILIES)], rng) for i in range(samples)]
+
+    # oracle: measured SpMV time of every candidate, per matrix
+    oracle = []
+    for A in mats:
+        x = jnp.ones((A.shape[1],), A.dtype)
+        rep = profile_select(A, x, candidates=DEFAULT_CANDIDATES, iters=iters)
+        oracle.append(rep.times)
+
+    cache_path = os.path.join(tempfile.mkdtemp(prefix="bench-select-"),
+                              "selections.json")
+    policies = {
+        "analytic": FormatPolicy("analytic"),
+        "ml": FormatPolicy("ml"),
+        "cached": FormatPolicy("cached", cache=SelectionCache(cache_path)),
+        "profile": FormatPolicy("profile", profile_iters=iters),
+    }
+    # warm the cache so "cached" measures the steady state, not first touch
+    for A in mats:
+        policies["cached"].select(A)
+
+    rows = []
+    for mode in MODES:
+        pol = policies[mode]
+        quality, sel_times, hits = [], [], 0
+        for A, times in zip(mats, oracle):
+            t0 = time.perf_counter()
+            rep = pol.select(A)
+            sel_times.append(time.perf_counter() - t0)
+            best_t = min(times.values())
+            chosen_t = times.get(rep.best)
+            if chosen_t is None:  # pick outside the timed candidate set
+                x = jnp.ones((A.shape[1],), A.dtype)
+                fn = jax.jit(lambda a, v: spmv(a, v))
+                chosen_t = time_fn(fn, convert(A, rep.best), x, iters=iters)
+            quality.append(chosen_t / best_t)
+            hits += int(rep.best == min(times, key=times.get))
+        rows.append((
+            f"select_{mode}_slowdown_geomean",
+            float(np.exp(np.mean(np.log(quality)))),
+            f"oracle_agreement={hits}/{len(mats)}",
+        ))
+        rows.append((
+            f"select_{mode}_overhead_ms_median",
+            float(np.median(sel_times) * 1e3),
+            f"max={max(sel_times) * 1e3:.2f}ms",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--samples", type=int, default=18)
+    p.add_argument("--seed", type=int, default=42)
+    p.add_argument("--iters", type=int, default=8)
+    args = p.parse_args()
+    for r in run(args.samples, args.seed, args.iters):
+        print(",".join(str(c) for c in r))

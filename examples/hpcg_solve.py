@@ -9,6 +9,8 @@ Reproduces the paper's workflow end-to-end:
 
 Run (8 simulated devices):
   HPCG_DEVICES=8 PYTHONPATH=src python examples/hpcg_solve.py --mode multiformat
+  HPCG_DEVICES=8 PYTHONPATH=src python examples/hpcg_solve.py \
+      --mode multiformat --tune cached   # warm cache: zero profiling runs
   PYTHONPATH=src python examples/hpcg_solve.py --local DIA --remote COO
 """
 import argparse
@@ -35,6 +37,10 @@ def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--grid", type=int, nargs=3, default=[16, 16, 32])
     p.add_argument("--mode", choices=["uniform", "multiformat"], default="uniform")
+    p.add_argument("--tune", default="ml",
+                   choices=["ml", "cached", "analytic", "profile"],
+                   help="per-shard selection policy in multiformat mode "
+                        "(repro.tuning.FormatPolicy)")
     p.add_argument("--local", default="DIA", choices=[f.name for f in Format])
     p.add_argument("--remote", default="COO", choices=[f.name for f in Format])
     p.add_argument("--tol", type=float, default=1e-7)
@@ -58,7 +64,8 @@ def main(argv=None):
     t0 = time.perf_counter()
     A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
                           "rows", local_format=Format[args.local],
-                          remote_format=Format[args.remote], mode=args.mode)
+                          remote_format=Format[args.remote], mode=args.mode,
+                          tune=args.tune)
     print(f"optimization: {A} ({time.perf_counter() - t0:.2f}s)")
     if args.mode == "multiformat":
         from repro.core import DEFAULT_CANDIDATES

@@ -1,179 +1,44 @@
-"""Format auto-tuner (paper §V-E "naive auto-tuner" + beyond-paper analytic).
+"""Format auto-tuner — compatibility shims over ``repro.tuning``.
 
-Two selection modes:
+The selection engines historically lived here; they moved to the
+``repro.tuning`` subsystem (features / engines / tree / cache / policy).
+This module keeps the original public API stable for existing callers and
+adds the ML and cached modes to ``autotune()``:
 
-* ``profile`` — the paper's approach: run each candidate format's compiled
-  SpMV a few times and pick the fastest (per matrix / per shard).
-* ``analytic`` — beyond-paper (the paper's stated future work): SpMV is
-  memory-bandwidth bound, so predicted time = bytes_touched / HBM_bw with an
-  irregularity penalty on gathered x accesses. No profiling runs needed,
-  works at trace time, and is what a 1000-node deployment would actually use
-  (profiling 512 shards x 6 formats each restart is not viable).
+* ``profile``  — the paper's §V-E tuner (run candidates, pick fastest)
+* ``analytic`` — bytes-touched / bandwidth model, no profiling runs
+* ``ml``       — pre-trained decision tree over pattern features
+* ``cached``   — persistent per-(pattern, backend, device) selection cache
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, Optional, Sequence
+from repro.tuning.engines import (GATHER_PENALTY, HBM_BW, TuneReport,
+                                  analytic_select, calibrate_gather_penalty,
+                                  predicted_bytes, profile_select, time_fn)
+from repro.tuning.features import PatternFeatures, PatternStats
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+# Historical private name, kept for callers that reached into it.
+_time_fn = time_fn
 
-from repro.core.convert import convert as _convert_fn, to_coo as _to_coo_fn
-from repro.core import ops as _ops
-from repro.core.dynamic import DynamicMatrix
-from repro.core.formats import BSR, COO, CSR, DIA, ELL, Dense, Format, bytes_of
-
-# v5e-class constants; overridable for other targets.
-HBM_BW = 819e9  # bytes/s
-GATHER_PENALTY = 4.0  # effective-bandwidth derate for data-dependent gathers
-
-_CALIBRATED_PENALTY = None
-
-
-def calibrate_gather_penalty(n: int = 1 << 18, iters: int = 5) -> float:
-    """Measure the *actual* gather-vs-stream bandwidth ratio of the running
-    backend and use it as the analytic model's penalty (beyond-paper: makes
-    the no-profiling tuner performance-portable — the v5e default of 4.0 is
-    wrong on e.g. CPU, where profiling and analytic modes then disagree).
-    Cached per process."""
-    global _CALIBRATED_PENALTY
-    if _CALIBRATED_PENALTY is not None:
-        return _CALIBRATED_PENALTY
-    key = np.random.default_rng(0)
-    x = jnp.asarray(key.standard_normal(n).astype(np.float32))
-    idx = jnp.asarray(key.integers(0, n, n).astype(np.int32))
-    stream = jax.jit(lambda v: v * 2.0 + 1.0)
-    gather = jax.jit(lambda v, i: jnp.take(v, i, mode="clip"))
-    t_s = _time_fn(stream, x, iters=iters)
-    t_g = _time_fn(gather, x, idx, iters=iters)
-    _CALIBRATED_PENALTY = float(max(1.0, t_g / max(t_s, 1e-9)))
-    return _CALIBRATED_PENALTY
-
-
-@dataclasses.dataclass
-class TuneReport:
-    best: Format
-    times: Dict[Format, float]  # seconds (measured or predicted)
-    mode: str
-
-    def __repr__(self):
-        rows = ", ".join(f"{f.name}={t:.3e}s" for f, t in self.times.items())
-        return f"TuneReport(best={self.best.name}, mode={self.mode}, {rows})"
-
-
-@dataclasses.dataclass
-class PatternStats:
-    """Host-side sparsity-pattern statistics driving the analytic model."""
-
-    m: int
-    n: int
-    nnz: int
-    max_row_nnz: int
-    ndiag: int
-    itemsize: int = 4
-
-    @classmethod
-    def from_coo(cls, A: COO) -> "PatternStats":
-        r = np.asarray(A.row)
-        c = np.asarray(A.col)
-        d = np.asarray(A.data)
-        live = d != 0
-        r, c = r[live], c[live]
-        nnz = int(live.sum())
-        max_row = int(np.bincount(r, minlength=A.shape[0]).max()) if nnz else 1
-        ndiag = int(np.unique(c.astype(np.int64) - r.astype(np.int64)).size) if nnz else 1
-        return cls(A.shape[0], A.shape[1], nnz, max(1, max_row), max(1, ndiag),
-                   np.dtype(A.dtype).itemsize)
-
-
-def predicted_bytes(stats: PatternStats, fmt: Format,
-                    gather_penalty: Optional[float] = None) -> float:
-    """Bytes touched by one SpMV in ``fmt`` (matrix + x-access cost model)."""
-    GATHER = gather_penalty if gather_penalty is not None else GATHER_PENALTY
-    w, m, n = stats.itemsize, stats.m, stats.n
-    ii = 4  # index itemsize
-    if fmt == Format.COO:
-        mat = stats.nnz * (2 * ii + w)
-        x = stats.nnz * w * GATHER
-    elif fmt == Format.CSR:
-        mat = stats.nnz * (ii + w) + (m + 1) * ii
-        x = stats.nnz * w * GATHER
-    elif fmt == Format.DIA:
-        mat = stats.ndiag * m * w + stats.ndiag * ii
-        x = stats.ndiag * m * w  # contiguous shifted reads: NO penalty
-    elif fmt == Format.ELL:
-        mat = stats.max_row_nnz * m * (ii + w)
-        x = stats.max_row_nnz * m * w * GATHER
-    elif fmt == Format.BSR:
-        bs = 128
-        blocks = max(1, int(np.ceil(stats.nnz / (bs * bs))))  # lower bound
-        mat = blocks * bs * bs * w + blocks * ii
-        x = blocks * bs * w
-    elif fmt == Format.HYB:
-        k = min(stats.max_row_nnz, max(1, stats.nnz // max(1, stats.m)))
-        ell_n = min(stats.nnz, k * stats.m)
-        coo_n = stats.nnz - ell_n
-        mat = ell_n * (ii + w) + coo_n * (2 * ii + w)
-        x = (ell_n + coo_n) * w * GATHER
-    elif fmt == Format.DENSE:
-        mat = m * n * w
-        x = n * w * max(1, m // 1024)
-    else:
-        raise ValueError(fmt)
-    y = m * w
-    return float(mat + x + y)
-
-
-def analytic_select(stats: PatternStats,
-                    candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
-                    hbm_bw: float = HBM_BW,
-                    calibrate: bool = False) -> TuneReport:
-    pen = calibrate_gather_penalty() if calibrate else None
-    times = {Format(f): predicted_bytes(stats, Format(f), pen) / hbm_bw
-             for f in candidates}
-    best = min(times, key=times.get)
-    return TuneReport(best, times, "analytic-calibrated" if calibrate else "analytic")
-
-
-def _time_fn(fn, *args, iters: int = 10, warmup: int = 2) -> float:
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
-def profile_select(A, x,
-                   candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
-                   iters: int = 10, backend: str = "ref",
-                   conv_kwargs: Optional[dict] = None) -> TuneReport:
-    """The paper's profiling auto-tuner: convert, compile, time, pick best."""
-    A = A.concrete if isinstance(A, DynamicMatrix) else A
-    conv_kwargs = conv_kwargs or {}
-    times: Dict[Format, float] = {}
-    for fmt in candidates:
-        fmt = Format(fmt)
-        try:
-            Af = _convert_fn(A, fmt, **conv_kwargs.get(fmt, {}))
-        except (ValueError, MemoryError):
-            continue  # e.g. BSR on a non-block-aligned shape
-        fn = jax.jit(lambda a, v: _ops.spmv(a, v, backend=backend))
-        times[fmt] = _time_fn(fn, Af, x, iters=iters)
-    best = min(times, key=times.get)
-    return TuneReport(best, times, "profile")
+__all__ = [
+    "HBM_BW", "GATHER_PENALTY", "TuneReport", "PatternStats",
+    "PatternFeatures", "analytic_select", "profile_select",
+    "predicted_bytes", "calibrate_gather_penalty", "autotune", "time_fn",
+]
 
 
 def autotune(A, x=None, mode: str = "profile", **kwargs) -> TuneReport:
     """Select the best format for ``A`` (paper: per process; here: per shard).
 
-    ``mode='profile'`` needs ``x``; ``mode='analytic'`` needs only the
-    pattern (pulled to host once).
+    ``mode='profile'`` needs ``x``; every other mode needs only the pattern
+    (pulled to host once). ``mode='ml'``/``'cached'`` delegate to a
+    ``repro.tuning.FormatPolicy`` (kwargs: ``candidates``, ``tree``,
+    ``cache``).
     """
+    from repro.core.convert import to_coo as _to_coo_fn
+    from repro.core.dynamic import DynamicMatrix
+    from repro.tuning.policy import FormatPolicy
+
     if mode == "profile":
         if x is None:
             raise ValueError("profile mode requires x")
@@ -182,4 +47,6 @@ def autotune(A, x=None, mode: str = "profile", **kwargs) -> TuneReport:
         A = A.concrete if isinstance(A, DynamicMatrix) else A
         stats = PatternStats.from_coo(_to_coo_fn(A))
         return analytic_select(stats, **kwargs)
+    if mode in ("ml", "cached"):
+        return FormatPolicy(mode, **kwargs).select(A, x=x)
     raise ValueError(mode)

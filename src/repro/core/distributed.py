@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.autotune import autotune as _autotune_fn
+from repro.core import compat
 from repro.core.convert import convert as _convert_fn
 from repro.core import ops as _ops
 from repro.core.dynamic import DynamicMatrix, SwitchDynamicMatrix
@@ -146,7 +146,7 @@ def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "ref"):
         return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,
                            A.hw, axis, A.nshards, A.halo_mode, backend)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(part_spec(A.local), part_spec(A.remote), P(axis)),
         out_specs=P(axis))
@@ -276,6 +276,12 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
     mode='uniform'      local/remote formats fixed (Morpheus & Ghost configs)
     mode='multiformat'  per-shard formats chosen by the auto-tuner, dispatched
                         via SwitchDynamicMatrix (paper's Multi-Format).
+
+    ``tune`` names the per-shard selection strategy: a
+    ``repro.tuning.FormatPolicy`` mode ("ml" | "cached" | "analytic" |
+    "profile"), a FormatPolicy instance, or the historical alias
+    "calibrated" (= profile). At production shard counts use "cached": a
+    warm cache selects every shard's format without a single profiling run.
     """
     sizes = mesh.shape
     names = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -292,16 +298,26 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
         local = stack_parts(_convert_uniform(lcoos, Format(local_format)))
         remote = stack_parts(_convert_uniform(rcoos, Format(remote_format)))
     elif mode == "multiformat":
-        # per-shard selection, paper §V-E (profiling) / DESIGN §2 (analytic)
+        # per-shard selection, paper §V-E, via the unified FormatPolicy
+        from repro.tuning.policy import FormatPolicy
+
+        if isinstance(tune, FormatPolicy):
+            policy = tune
+            if not set(policy.candidates) <= set(Format(c) for c in candidates):
+                raise ValueError(
+                    f"tune policy candidates {[f.name for f in policy.candidates]} "
+                    f"must be a subset of the build candidates "
+                    f"{[Format(c).name for c in candidates]}: every pick has "
+                    f"to map onto a resident union variant")
+        else:
+            pmode = "profile" if tune == "calibrated" else tune
+            policy = FormatPolicy(pmode, candidates=tuple(candidates),
+                                  profile_iters=3)
+
         def select(coos):
             ids = []
             for c in coos:
-                if tune == "analytic":
-                    rep = _autotune_fn(c, mode="analytic", candidates=candidates)
-                else:
-                    xs = jnp.ones((c.shape[1],), dtype)
-                    rep = _autotune_fn(c, xs, mode="profile",
-                                             candidates=candidates, iters=3)
+                rep = policy.select(c, x=jnp.ones((c.shape[1],), dtype))
                 ids.append(list(candidates).index(rep.best))
             return np.asarray(ids, np.int32)
 

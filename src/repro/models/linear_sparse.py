@@ -14,16 +14,18 @@ drives SpMV format selection.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DynamicMatrix, Format, analytic_select, autotune,
-                        coo_from_dense_np, convert, spmm)
-from repro.core.autotune import PatternStats
+from repro.core import (DynamicMatrix, Format, coo_from_dense_np, convert,
+                        spmm)
+from repro.tuning.policy import FormatPolicy
+
+# Weight matrices are ragged post-pruning; DIA is never competitive there,
+# while HYB handles the long-tail rows a magnitude prune leaves behind.
+WEIGHT_CANDIDATES = (Format.CSR, Format.ELL, Format.HYB, Format.COO)
 
 
 def prune_magnitude(w: np.ndarray, density: float) -> np.ndarray:
@@ -44,22 +46,18 @@ class LinearSparse:
 
     @classmethod
     def from_dense(cls, w, fmt: Optional[Format] = None, bias=None,
-                   tune: str = "analytic", **conv_kwargs) -> "LinearSparse":
+                   tune="analytic", **conv_kwargs) -> "LinearSparse":
         """Build from a (pruned) dense weight (d_in, d_out); fmt=None
-        auto-tunes. Stored TRANSPOSED (d_out, d_in): y = x@W computes as
+        auto-tunes via a FormatPolicy — ``tune`` is a policy mode string
+        ("ml" | "profile" | "analytic" | "cached") or a FormatPolicy.
+        Stored TRANSPOSED (d_out, d_in): y = x@W computes as
         spmm(W^T, x^T)^T — SpMM contracts the stored matrix's columns."""
         coo = coo_from_dense_np(np.asarray(w).T)
         if fmt is None:
-            if tune == "analytic":
-                fmt = analytic_select(
-                    PatternStats.from_coo(coo),
-                    candidates=(Format.CSR, Format.ELL, Format.HYB, Format.COO),
-                ).best
-            else:
-                x = jnp.ones((coo.shape[0],), jnp.float32)
-                fmt = autotune(coo, x, mode="profile", iters=3,
-                               candidates=(Format.CSR, Format.ELL, Format.HYB,
-                                           Format.COO)).best
+            policy = (tune if isinstance(tune, FormatPolicy)
+                      else FormatPolicy(tune, candidates=WEIGHT_CANDIDATES,
+                                        profile_iters=3))
+            fmt = policy.select(coo).best
         return cls(DynamicMatrix(convert(coo, fmt, **conv_kwargs)), bias)
 
     @property

@@ -1,0 +1,37 @@
+"""repro.tuning — ML-driven, cache-backed format selection.
+
+The production answer to the paper's "naive auto-tuner": a trained
+classifier over sparsity-pattern features (arXiv:2303.05098) with
+per-backend persistent caching (the winning format varies per device —
+arXiv:2304.09511), fronted by ``FormatPolicy`` with a
+cached -> ml -> analytic fallback chain.
+
+    from repro.tuning import FormatPolicy
+    policy = FormatPolicy("ml")
+    fmt = policy.select(A).best
+
+Retrain the packaged model on the current backend with
+``python -m repro.tuning.corpus``.
+"""
+from repro.tuning.cache import (CACHE_PATH_ENV, SelectionCache,
+                                default_cache_path, pattern_signature)
+from repro.tuning.engines import (GATHER_PENALTY, HBM_BW, TuneReport,
+                                  analytic_select, calibrate_gather_penalty,
+                                  predicted_bytes, profile_select, time_fn)
+from repro.tuning.features import FEATURE_NAMES, PatternFeatures, PatternStats
+from repro.tuning.policy import MODES, FormatPolicy
+from repro.tuning.tree import (DEFAULT_TREE_PATH, DecisionTree,
+                               load_default_tree)
+
+__all__ = [
+    "FormatPolicy", "MODES",
+    "PatternFeatures", "PatternStats", "FEATURE_NAMES",
+    "DecisionTree", "load_default_tree", "DEFAULT_TREE_PATH",
+    "SelectionCache", "pattern_signature", "default_cache_path",
+    "CACHE_PATH_ENV",
+    "TuneReport", "analytic_select", "profile_select", "predicted_bytes",
+    "calibrate_gather_penalty", "time_fn", "HBM_BW", "GATHER_PENALTY",
+]
+
+# The corpus generator/trainer is import-on-demand (repro.tuning.corpus):
+# importing it here would re-trigger package init under `python -m`.

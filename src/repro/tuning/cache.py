@@ -1,0 +1,129 @@
+"""Persistent on-disk format-selection cache.
+
+Selections are keyed by *pattern signature x backend x device kind x
+candidate set*: the winning format is a property of (sparsity pattern,
+hardware), so a selection learned on one device class must never be replayed
+on another (Morpheus-unleashed: the winner varies per device), while a
+restarted process on the same device should pay zero re-selection cost —
+the production answer to "profiling 512 shards x 6 formats each restart is
+not viable".
+
+The store is a flat JSON dict written atomically (tmp + rename); corrupt or
+missing files degrade to an empty cache, never to an error.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import warnings
+from typing import Dict, Optional, Sequence
+
+from repro.core.formats import Format
+from repro.tuning.features import PatternFeatures
+
+CACHE_PATH_ENV = "REPRO_TUNING_CACHE"
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(CACHE_PATH_ENV)
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro-tuning", "selections.json")
+
+
+def pattern_signature(feats: PatternFeatures, digits: int = 4) -> str:
+    """Stable short hash of the quantized feature vector + exact dims.
+
+    Quantizing the float features makes the signature robust to numeric
+    noise while still separating genuinely different patterns; the exact
+    (m, n, nnz) triple is appended so distinct problems with coincidentally
+    similar features stay distinct.
+    """
+    vec = feats.vector()
+    payload = ",".join(f"{v:.{digits}e}" for v in vec)
+    payload += f"|{feats.m}x{feats.n}|{feats.nnz}"
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+class SelectionCache:
+    """Dict-on-disk of selection keys -> format names."""
+
+    def __init__(self, path: Optional[str] = None, autoflush: bool = True):
+        self.path = path or default_cache_path()
+        self.autoflush = autoflush
+        self._data: Optional[Dict[str, str]] = None
+        self._write_failed = False
+
+    # -- storage ------------------------------------------------------------
+
+    def _load(self) -> Dict[str, str]:
+        if self._data is None:
+            self._data = self._read_disk()
+        return self._data
+
+    def _read_disk(self) -> Dict[str, str]:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+        except (OSError, ValueError):
+            return {}
+        if not isinstance(raw, dict):
+            return {}  # valid JSON but not a cache — degrade, don't crash
+        return {str(k): str(v) for k, v in raw.items()}
+
+    def flush(self) -> None:
+        if self._data is None:
+            return
+        try:
+            # Merge-on-flush: concurrent processes (one per host in a
+            # multi-host launch) each rewrite the whole file; unioning with
+            # what is on disk first means last-writer-wins only applies to
+            # true per-key races, not to whole snapshots.
+            self._data = {**self._read_disk(), **self._data}
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            tmp = f"{self.path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(self._data, f, indent=0, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError as e:
+            # An unwritable cache degrades to in-memory: selection must
+            # never fail because persistence is unavailable.
+            if not self._write_failed:
+                self._write_failed = True
+                warnings.warn(f"selection cache not persistable at "
+                              f"{self.path!r}: {e}")
+
+    def clear(self) -> None:
+        self._data = {}
+        if self.autoflush:
+            self.flush()
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    # -- keys & lookups ------------------------------------------------------
+
+    @staticmethod
+    def key(feats: PatternFeatures, candidates: Sequence[Format],
+            backend: str, device_kind: str) -> str:
+        cand = "-".join(Format(c).name for c in candidates)
+        return f"{pattern_signature(feats)}|{backend}|{device_kind}|{cand}"
+
+    def get(self, key: str) -> Optional[Format]:
+        name = self._load().get(key)
+        if name is None:
+            return None
+        try:
+            return Format[name]
+        except KeyError:
+            return None  # stale entry from an older format zoo
+
+    def put(self, key: str, fmt: Format) -> None:
+        self._load()[key] = Format(fmt).name
+        if self.autoflush:
+            self.flush()

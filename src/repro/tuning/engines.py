@@ -1,0 +1,165 @@
+"""Selection engines: the paper's profiling tuner + the analytic byte model.
+
+Moved out of ``core.autotune`` (which keeps its public API as shims); the
+``FormatPolicy`` front-end in ``repro.tuning.policy`` composes these with
+the ML classifier and the persistent cache.
+
+* ``profile_select`` — the paper's §V-E approach: run each candidate
+  format's compiled SpMV a few times and pick the fastest.
+* ``analytic_select`` — SpMV is memory-bandwidth bound, so predicted time =
+  bytes_touched / HBM_bw with an irregularity penalty on gathered x
+  accesses. Works at trace time, no profiling runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.convert import convert as _convert_fn
+from repro.core import ops as _ops
+from repro.core.dynamic import DynamicMatrix
+from repro.core.formats import Format
+from repro.tuning.features import PatternStats
+
+# v5e-class constants; overridable for other targets.
+HBM_BW = 819e9  # bytes/s
+GATHER_PENALTY = 4.0  # effective-bandwidth derate for data-dependent gathers
+
+# Measured gather penalty, keyed by jax.default_backend(): a process that
+# mixes backends (cpu tests + tpu jobs) must not reuse the wrong number.
+_CALIBRATED_PENALTY: Dict[str, float] = {}
+
+
+def calibrate_gather_penalty(n: int = 1 << 18, iters: int = 5) -> float:
+    """Measure the *actual* gather-vs-stream bandwidth ratio of the running
+    backend and use it as the analytic model's penalty (makes the
+    no-profiling tuner performance-portable — the v5e default of 4.0 is
+    wrong on e.g. CPU). Cached per backend per process."""
+    backend = jax.default_backend()
+    if backend in _CALIBRATED_PENALTY:
+        return _CALIBRATED_PENALTY[backend]
+    key = np.random.default_rng(0)
+    x = jnp.asarray(key.standard_normal(n).astype(np.float32))
+    idx = jnp.asarray(key.integers(0, n, n).astype(np.int32))
+    stream = jax.jit(lambda v: v * 2.0 + 1.0)
+    gather = jax.jit(lambda v, i: jnp.take(v, i, mode="clip"))
+    t_s = time_fn(stream, x, iters=iters)
+    t_g = time_fn(gather, x, idx, iters=iters)
+    penalty = float(max(1.0, t_g / max(t_s, 1e-9)))
+    _CALIBRATED_PENALTY[backend] = penalty
+    return penalty
+
+
+@dataclasses.dataclass
+class TuneReport:
+    best: Format
+    times: Dict[Format, float]  # seconds (measured or predicted)
+    mode: str
+
+    def __repr__(self):
+        rows = ", ".join(f"{f.name}={t:.3e}s" for f, t in self.times.items())
+        return f"TuneReport(best={self.best.name}, mode={self.mode}, {rows})"
+
+
+def predicted_bytes(stats: PatternStats, fmt: Format,
+                    gather_penalty: Optional[float] = None) -> float:
+    """Bytes touched by one SpMV in ``fmt`` (matrix + x-access cost model)."""
+    GATHER = gather_penalty if gather_penalty is not None else GATHER_PENALTY
+    w, m, n = stats.itemsize, stats.m, stats.n
+    ii = 4  # index itemsize
+    if fmt == Format.COO:
+        mat = stats.nnz * (2 * ii + w)
+        x = stats.nnz * w * GATHER
+    elif fmt == Format.CSR:
+        mat = stats.nnz * (ii + w) + (m + 1) * ii
+        x = stats.nnz * w * GATHER
+    elif fmt == Format.DIA:
+        mat = stats.ndiag * m * w + stats.ndiag * ii
+        x = stats.ndiag * m * w  # contiguous shifted reads: NO penalty
+    elif fmt == Format.ELL:
+        mat = stats.max_row_nnz * m * (ii + w)
+        x = stats.max_row_nnz * m * w * GATHER
+    elif fmt == Format.BSR:
+        bs = 128
+        blocks = max(1, int(np.ceil(stats.nnz / (bs * bs))))  # lower bound
+        mat = blocks * bs * bs * w + blocks * ii
+        x = blocks * bs * w
+    elif fmt == Format.HYB:
+        k = min(stats.max_row_nnz, max(1, stats.nnz // max(1, stats.m)))
+        ell_n = min(stats.nnz, k * stats.m)
+        coo_n = stats.nnz - ell_n
+        mat = ell_n * (ii + w) + coo_n * (2 * ii + w)
+        x = (ell_n + coo_n) * w * GATHER
+    elif fmt == Format.DENSE:
+        mat = m * n * w
+        x = n * w * max(1, m // 1024)
+    else:
+        raise ValueError(fmt)
+    y = m * w
+    return float(mat + x + y)
+
+
+def analytic_select(stats: PatternStats,
+                    candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
+                    hbm_bw: float = HBM_BW,
+                    calibrate: bool = False) -> TuneReport:
+    pen = calibrate_gather_penalty() if calibrate else None
+    times = {Format(f): predicted_bytes(stats, Format(f), pen) / hbm_bw
+             for f in candidates}
+    best = min(times, key=times.get)
+    return TuneReport(best, times, "analytic-calibrated" if calibrate else "analytic")
+
+
+def time_fn(fn, *args, iters: int = 10, warmup: int = 2,
+            inner: int = 1) -> float:
+    """Best-of-``iters`` wall time of a call (compile excluded).
+
+    ``inner`` > 1 times a block of back-to-back dispatches and divides: for
+    microsecond-scale ops the per-call dispatch jitter rivals the op itself,
+    and amortizing it is what makes profiling labels reproducible on a
+    shared/loaded host.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def profile_select(A, x,
+                   candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
+                   iters: int = 10, backend: str = "ref",
+                   conv_kwargs: Optional[dict] = None,
+                   inner: int = 4) -> TuneReport:
+    """The paper's profiling auto-tuner: convert, compile, time, pick best."""
+    A = A.concrete if isinstance(A, DynamicMatrix) else A
+    conv_kwargs = conv_kwargs or {}
+    times: Dict[Format, float] = {}
+    skipped: Dict[str, str] = {}
+    for fmt in candidates:
+        fmt = Format(fmt)
+        try:
+            Af = _convert_fn(A, fmt, **conv_kwargs.get(fmt, {}))
+        except (ValueError, MemoryError) as e:
+            # e.g. BSR on a non-block-aligned shape
+            skipped[fmt.name] = f"{type(e).__name__}: {e}"
+            continue
+        fn = jax.jit(lambda a, v: _ops.spmv(a, v, backend=backend))
+        times[fmt] = time_fn(fn, Af, x, iters=iters, inner=inner)
+    if not times:
+        raise ValueError(
+            f"profile_select: every candidate format failed conversion for "
+            f"matrix of shape {tuple(A.shape)}; skipped candidates: {skipped}")
+    best = min(times, key=times.get)
+    return TuneReport(best, times, "profile")

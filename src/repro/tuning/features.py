@@ -1,0 +1,149 @@
+"""Host-side sparsity-pattern features for format selection.
+
+Two granularities:
+
+* ``PatternStats`` — the minimal statistics driving the analytic byte model
+  (moved here from ``core.autotune``; that module re-exports it).
+* ``PatternFeatures`` — the rich feature vector consumed by the ML
+  classifier (arXiv:2303.05098 trains exactly this kind of model): row-nnz
+  distribution moments, diagonal fill, bandwidth, block density, ELLPACK
+  efficiency. All features are computed on host from the COO pattern in one
+  pass; scale-dependent quantities are logged or normalised so the model
+  generalises across matrix sizes.
+
+Feature extraction is setup-phase work (like conversion's symbolic phase):
+it pulls the index arrays to host once, costs O(nnz), and never runs inside
+a jitted computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.formats import COO
+
+# Order matters: this is the layout of ``PatternFeatures.vector()`` and the
+# feature ids stored inside serialized decision trees.
+FEATURE_NAMES = (
+    "log_m",           # log10 rows
+    "log_n",           # log10 cols
+    "log_nnz",         # log10 stored non-zeros
+    "density",         # nnz / (m*n)
+    "row_nnz_mean",    # mean row length
+    "row_nnz_std",     # row length standard deviation
+    "row_nnz_max",     # longest row
+    "row_cv",          # std / mean row length (irregularity)
+    "row_max_frac",    # max row length / n  (ELL padding risk)
+    "ndiag",           # occupied diagonals
+    "ndiag_frac",      # ndiag / (m + n - 1)
+    "diag_fill",       # nnz / (ndiag * min(m, n))  (DIA efficiency)
+    "bandwidth_frac",  # max |col - row| / n
+    "block_density",   # nnz / touched 8x8 blocks' capacity (BSR efficiency)
+    "ell_efficiency",  # nnz / (m * row_nnz_max)  (ELL payload utilisation)
+)
+
+
+@dataclasses.dataclass
+class PatternStats:
+    """Host-side sparsity-pattern statistics driving the analytic model."""
+
+    m: int
+    n: int
+    nnz: int
+    max_row_nnz: int
+    ndiag: int
+    itemsize: int = 4
+
+    @classmethod
+    def from_coo(cls, A: COO) -> "PatternStats":
+        r = np.asarray(A.row)
+        c = np.asarray(A.col)
+        d = np.asarray(A.data)
+        live = d != 0
+        r, c = r[live], c[live]
+        nnz = int(live.sum())
+        max_row = int(np.bincount(r, minlength=A.shape[0]).max()) if nnz else 1
+        ndiag = int(np.unique(c.astype(np.int64) - r.astype(np.int64)).size) if nnz else 1
+        return cls(A.shape[0], A.shape[1], nnz, max(1, max_row), max(1, ndiag),
+                   np.dtype(A.dtype).itemsize)
+
+
+@dataclasses.dataclass
+class PatternFeatures:
+    """Rich pattern features (superset of ``PatternStats``)."""
+
+    m: int
+    n: int
+    nnz: int
+    itemsize: int
+    row_nnz_mean: float
+    row_nnz_std: float
+    row_nnz_max: int
+    ndiag: int
+    bandwidth: int
+    diag_fill: float
+    block_density: float
+    ell_efficiency: float
+
+    BLOCK_PROBE = 8  # block grid used for the block_density feature
+
+    @classmethod
+    def from_coo(cls, A: COO) -> "PatternFeatures":
+        m, n = A.shape
+        r = np.asarray(A.row).astype(np.int64)
+        c = np.asarray(A.col).astype(np.int64)
+        d = np.asarray(A.data)
+        live = d != 0
+        r, c = r[live], c[live]
+        nnz = int(live.sum())
+        if nnz == 0:
+            return cls(m, n, 0, np.dtype(A.dtype).itemsize,
+                       0.0, 0.0, 1, 1, 0, 0.0, 0.0, 0.0)
+        counts = np.bincount(r, minlength=m)
+        row_max = int(counts.max())
+        diffs = c - r
+        ndiag = int(np.unique(diffs).size)
+        bandwidth = int(np.abs(diffs).max())
+        bs = cls.BLOCK_PROBE
+        nbc = (n + bs - 1) // bs
+        nblocks = int(np.unique((r // bs) * nbc + (c // bs)).size)
+        return cls(
+            m=m, n=n, nnz=nnz, itemsize=np.dtype(A.dtype).itemsize,
+            row_nnz_mean=float(counts.mean()),
+            row_nnz_std=float(counts.std()),
+            row_nnz_max=row_max,
+            ndiag=ndiag,
+            bandwidth=bandwidth,
+            diag_fill=nnz / (ndiag * min(m, n)),
+            block_density=nnz / (nblocks * bs * bs),
+            ell_efficiency=nnz / (m * row_max),
+        )
+
+    def vector(self) -> np.ndarray:
+        """Feature vector in ``FEATURE_NAMES`` order (float64)."""
+        m, n, nnz = self.m, self.n, max(self.nnz, 1)
+        mean = max(self.row_nnz_mean, 1e-12)
+        return np.array([
+            np.log10(max(m, 1)),
+            np.log10(max(n, 1)),
+            np.log10(nnz),
+            self.nnz / (m * n),
+            self.row_nnz_mean,
+            self.row_nnz_std,
+            float(self.row_nnz_max),
+            self.row_nnz_std / mean,
+            self.row_nnz_max / max(n, 1),
+            float(self.ndiag),
+            self.ndiag / (m + n - 1),
+            self.diag_fill,
+            self.bandwidth / max(n, 1),
+            self.block_density,
+            self.ell_efficiency,
+        ], dtype=np.float64)
+
+    def to_stats(self) -> PatternStats:
+        """Project down to the analytic model's statistics."""
+        return PatternStats(self.m, self.n, max(self.nnz, 1),
+                            max(1, self.row_nnz_max), max(1, self.ndiag),
+                            self.itemsize)

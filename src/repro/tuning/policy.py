@@ -1,0 +1,124 @@
+"""FormatPolicy — the unified format-selection front-end.
+
+One object answers "which format should this matrix be stored in?" four
+ways, with an explicit fallback chain so every mode always returns a pick:
+
+    mode="profile"   run every candidate, pick the fastest (ground truth;
+                     needs real profiling runs — setup-phase only).
+    mode="ml"        pre-trained decision tree over pattern features
+                     (arXiv:2303.05098); falls back to analytic when no
+                     tree is available or it predicts outside the
+                     candidate set.
+    mode="analytic"  bytes-touched / bandwidth model; zero measurements.
+    mode="cached"    persistent per-(pattern, backend, device) cache; on a
+                     miss, selects via the ml chain and stores the result —
+                     a warm cache answers from a dict lookup, with no
+                     profiling or prediction work at all.
+
+The chain is therefore:  cached -> ml -> analytic  (profile never runs
+unless explicitly requested, it is the only mode that must execute device
+code).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.convert import to_coo as _to_coo_fn
+from repro.core.dynamic import DEFAULT_CANDIDATES, DynamicMatrix
+from repro.core.formats import Format
+from repro.tuning.cache import SelectionCache
+from repro.tuning.engines import TuneReport, analytic_select, profile_select
+from repro.tuning.features import PatternFeatures
+from repro.tuning.tree import DecisionTree, load_default_tree
+
+MODES = ("ml", "profile", "analytic", "cached")
+
+
+class FormatPolicy:
+    """Format selector with mode ``"ml" | "profile" | "analytic" | "cached"``.
+
+    Parameters
+    ----------
+    mode: selection strategy (see module docstring for the fallback chain).
+    candidates: formats considered; the pick is always one of these.
+    tree: a ``DecisionTree``, a path to a serialized one, or None for the
+        packaged default tree.
+    cache: a ``SelectionCache``, a path, or None for the default location
+        (``$REPRO_TUNING_CACHE`` or ``~/.cache/repro-tuning``).
+    profile_iters: timing repetitions in profile mode.
+    """
+
+    def __init__(self, mode: str = "ml",
+                 candidates: Sequence[Format] = DEFAULT_CANDIDATES,
+                 tree: Union[DecisionTree, str, None] = None,
+                 cache: Union[SelectionCache, str, None] = None,
+                 profile_iters: int = 6):
+        if mode not in MODES:
+            raise ValueError(f"mode {mode!r} not in {MODES}")
+        self.mode = mode
+        self.candidates = tuple(Format(c) for c in candidates)
+        self._tree = DecisionTree.load(tree) if isinstance(tree, str) else tree
+        self._tree_resolved = tree is not None and not isinstance(tree, str)
+        self.cache = (cache if isinstance(cache, SelectionCache)
+                      else SelectionCache(cache))
+        self.profile_iters = profile_iters
+
+    # -- the tree (lazy: loading JSON per policy instance is wasteful) -------
+
+    @property
+    def tree(self) -> Optional[DecisionTree]:
+        if self._tree is None and not self._tree_resolved:
+            self._tree = load_default_tree()
+            self._tree_resolved = True
+        return self._tree
+
+    # -- selection ----------------------------------------------------------
+
+    def select(self, A, x=None) -> TuneReport:
+        """Pick a format for ``A`` (a concrete container or DynamicMatrix).
+
+        ``x`` is only used by profile mode (synthesized as ones when absent).
+        """
+        A = A.concrete if isinstance(A, DynamicMatrix) else A
+        if self.mode == "profile":
+            if x is None:
+                x = jnp.ones((A.shape[1],), A.dtype)
+            return profile_select(A, x, candidates=self.candidates,
+                                  iters=self.profile_iters)
+
+        feats = PatternFeatures.from_coo(_to_coo_fn(A))
+        if self.mode == "analytic":
+            return analytic_select(feats.to_stats(), candidates=self.candidates)
+        if self.mode == "ml":
+            return self._select_ml(feats)
+
+        # mode == "cached"
+        key = SelectionCache.key(feats, self.candidates, jax.default_backend(),
+                                 _device_kind())
+        hit = self.cache.get(key)
+        if hit is not None and hit in self.candidates:
+            return TuneReport(hit, {}, "cached")
+        rep = self._select_ml(feats)
+        self.cache.put(key, rep.best)
+        return TuneReport(rep.best, rep.times, f"cached-miss:{rep.mode}")
+
+    __call__ = select
+
+    def _select_ml(self, feats: PatternFeatures) -> TuneReport:
+        tree = self.tree
+        if tree is not None:
+            fmt = Format(tree.predict_one(feats.vector()))
+            if fmt in self.candidates:
+                return TuneReport(fmt, {}, "ml")
+        # no tree shipped, or it predicts a format outside the candidate set
+        return analytic_select(feats.to_stats(), candidates=self.candidates)
+
+
+def _device_kind() -> str:
+    try:
+        return jax.devices()[0].device_kind
+    except (IndexError, RuntimeError):
+        return "unknown"

@@ -1,0 +1,55 @@
+"""Property-based system invariants (split from test_formats.py).
+
+Skipped wholesale when hypothesis isn't installed — property coverage is a
+test extra (`pip install .[test]`), not a tier-1 requirement.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Format, convert, random_coo, spmv, to_dense_np  # noqa: E402
+
+ALL_FORMATS = [Format.COO, Format.CSR, Format.DIA, Format.ELL, Format.DENSE]
+
+
+@st.composite
+def sparse_mats(draw):
+    m = draw(st.integers(4, 40))
+    n = draw(st.integers(4, 40))
+    density = draw(st.floats(0.02, 0.4))
+    seed = draw(st.integers(0, 2**16))
+    return random_coo(seed, (m, n), density=density)
+
+
+@given(sparse_mats(), st.sampled_from(ALL_FORMATS))
+@settings(max_examples=25, deadline=None)
+def test_prop_conversion_preserves_matrix(A, fmt):
+    """Invariant: convert() never changes the represented matrix."""
+    np.testing.assert_allclose(to_dense_np(convert(A, fmt)), to_dense_np(A),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(sparse_mats(), st.sampled_from(ALL_FORMATS), st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_prop_spmv_format_invariant(A, fmt, xseed):
+    """Invariant: SpMV result is independent of the storage format."""
+    x = np.random.default_rng(xseed).standard_normal(A.shape[1]).astype(np.float32)
+    y_coo = np.asarray(spmv(A, jnp.asarray(x)))
+    y_fmt = np.asarray(spmv(convert(A, fmt), jnp.asarray(x)))
+    np.testing.assert_allclose(y_fmt, y_coo, rtol=1e-4, atol=1e-4)
+
+
+@given(sparse_mats())
+@settings(max_examples=15, deadline=None)
+def test_prop_spmv_linearity(A):
+    """Invariant: A(ax + by) == a Ax + b Ay (exercises padding safety)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(A.shape[1]).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(A.shape[1]).astype(np.float32))
+    lhs = np.asarray(spmv(A, 2.0 * x + 3.0 * y))
+    rhs = 2.0 * np.asarray(spmv(A, x)) + 3.0 * np.asarray(spmv(A, y))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
