@@ -27,12 +27,18 @@ def run(size=(16, 16, 16)):
     A = hpcg.to_coo(prob)
     x = jnp.ones((prob.shape[0],), jnp.float32)
     f = jax.jit(lambda a, v: spmv(a, v))
+    from repro.core import convert_execute, plan_switch
+    ex = jax.jit(convert_execute, static_argnums=1)
     for fmt in (Format.CSR, Format.DIA, Format.ELL):
         t_conv = _time(lambda fmt=fmt: convert(A, fmt))
+        plan = plan_switch(A, fmt)
+        t_exec = _time(lambda plan=plan: ex(A, plan))
         Af = convert(A, fmt)
         t_spmv = _time(lambda Af=Af: f(Af, x))
         rows.append((f"convert_COO_to_{fmt.name}", t_conv * 1e6,
                      f"spmvs_to_amortize={t_conv / max(t_spmv, 1e-9):.1f}"))
+        rows.append((f"convert_exec_COO_to_{fmt.name}", t_exec * 1e6,
+                     f"spmvs_to_amortize={t_exec / max(t_spmv, 1e-9):.1f}"))
     return rows
 
 

@@ -28,6 +28,7 @@ FORMATS = (Format.COO, Format.CSR, Format.DIA, Format.ELL)
 def run(sizes=((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48))):
     rows = []
     f = jax.jit(lambda a, v: spmv(a, v))
+    f_pallas = jax.jit(lambda a, v: spmv(a, v, backend="pallas"))
     for nx, ny, nz in sizes:
         prob = hpcg.generate_problem(nx, ny, nz)
         dm = DynamicMatrix(hpcg.to_coo(prob))
@@ -40,6 +41,10 @@ def run(sizes=((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48))):
         for fmt in FORMATS:
             rows.append((f"format_{fmt.name}_n{n}", times[fmt] * 1e6,
                          f"speedup_vs_csr={ref / times[fmt]:.2f}"))
+        # the reference format's Pallas kernel vs its pure-jnp path
+        t_csr_pallas = _time(f_pallas, dm.activate(Format.CSR), x)
+        rows.append((f"format_CSR_pallas_n{n}", t_csr_pallas * 1e6,
+                     f"speedup_vs_csr_ref={ref / t_csr_pallas:.2f}"))
         best = min(times, key=times.get)
         tuned = autotune(dm, mode="analytic").best
         rows.append((f"format_best_n{n}", times[best] * 1e6,

@@ -1,9 +1,20 @@
-"""Paper Fig. 3: dynamic-dispatch overhead.
+"""Paper Fig. 3: dynamic-dispatch overhead — plus format-*switch* overhead.
 
-Compares SpMV via (a) the concrete CSR container directly, (b) DynamicMatrix
-with active state CSR (trace-time dispatch), (c) SwitchDynamicMatrix
-(lax.switch runtime dispatch). The paper's claim: the abstraction adds no
-significant overhead (ratio ~1). Repeated over HPCG per-core problem sizes.
+``run`` compares SpMV via (a) the concrete CSR container directly, (b)
+DynamicMatrix with active state CSR (trace-time dispatch), (c)
+SwitchDynamicMatrix (lax.switch runtime dispatch). The paper's claim: the
+abstraction adds no significant overhead (ratio ~1). Repeated over HPCG
+per-core problem sizes.
+
+``run_switch`` measures the cost of the switch itself two ways:
+  * host-sync     — ``convert(A, fmt)``: symbolic phase recomputed every
+                    call (pattern analysis + host pulls), the pre-plan
+                    ``activate()`` behaviour;
+  * device-resident — symbolic phase done once (``plan_switch``), the
+                    timed call is the jitted zero-sync numeric phase
+                    (``convert_execute`` with the plan static).
+The ratio is how many times cheaper a steady-state switch becomes, i.e.
+how few SpMVs a switch must now win back to amortise.
 """
 import time
 
@@ -12,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DynamicMatrix, Format, SwitchDynamicMatrix, convert,
-                        hpcg, spmv)
+                        convert_execute, hpcg, plan_switch, spmv)
 
 
 def _time(fn, *args, iters=20, warmup=3):
@@ -43,6 +54,36 @@ def run(sizes=((8, 8, 8), (16, 16, 16), (24, 24, 24), (32, 32, 32))):
     return rows
 
 
+def _time_tree(fn, iters=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(jax.tree_util.tree_leaves(fn()))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(jax.tree_util.tree_leaves(fn()))
+    return (time.perf_counter() - t0) / iters
+
+
+SWITCH_FORMATS = (Format.CSR, Format.DIA, Format.ELL, Format.HYB)
+
+
+def run_switch(sizes=((8, 8, 8), (16, 16, 16), (24, 24, 24))):
+    rows = []
+    ex = jax.jit(convert_execute, static_argnums=1)
+    for nx, ny, nz in sizes:
+        prob = hpcg.generate_problem(nx, ny, nz)
+        A = hpcg.to_coo(prob)
+        n = prob.shape[0]
+        for fmt in SWITCH_FORMATS:
+            t_host = _time_tree(lambda fmt=fmt: convert(A, fmt))
+            plan = plan_switch(A, fmt)
+            t_dev = _time_tree(lambda plan=plan: ex(A, plan))
+            rows.append((f"switch_host_{fmt.name}_n{n}", t_host * 1e6,
+                         "replan_every_call"))
+            rows.append((f"switch_device_{fmt.name}_n{n}", t_dev * 1e6,
+                         f"speedup_vs_host={t_host / max(t_dev, 1e-9):.1f}"))
+    return rows
+
+
 if __name__ == "__main__":
-    for r in run():
+    for r in run() + run_switch():
         print(",".join(str(c) for c in r))

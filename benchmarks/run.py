@@ -1,19 +1,50 @@
 """Benchmark harness (deliverable d): one family per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and persists the perf trajectory:
 
   bench_overhead   Fig. 3  dynamic-dispatch overhead vs concrete CSR
   bench_formats    Fig. 4  single-node format comparison + autotuner pick
   bench_scaling    Fig. 5  multi-shard strong scaling (4 Morpheus versions)
   bench_convert    §III-B  conversion (format-switch) amortisation
+  switch           —       host-sync vs device-resident switch overhead
   bench_kernels    —       Pallas kernels (interpret) vs pure-jnp reference
   roofline         —       dry-run roofline table (if results are present)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+SpMV-side suites (formats/kernels/overhead) are written to
+``BENCH_spmv.json`` and conversion-side suites (convert/switch) to
+``BENCH_convert.json`` in ``--json-dir`` (default: cwd). Re-runs with
+``--only`` merge rows by name into the existing files instead of wiping
+them, so partial runs keep the trajectory intact.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only A,B] [--quick]
 """
 import argparse
+import json
+import os
 import sys
 import time
+
+SPMV_SUITES = ("overhead", "formats", "kernels")
+CONVERT_SUITES = ("convert", "switch")
+
+
+def _emit_json(path, rows, meta):
+    """Merge ``rows`` (by name) into the JSON perf artifact at ``path``."""
+    doc = {"meta": {}, "rows": []}
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        pass
+    by_name = {r["name"]: r for r in doc.get("rows", [])}
+    for name, us, derived in rows:
+        by_name[str(name)] = {"name": str(name), "us_per_call": float(us),
+                              "derived": str(derived)}
+    doc["meta"] = {**doc.get("meta", {}), **meta}
+    doc["rows"] = sorted(by_name.values(), key=lambda r: r["name"])
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    return path
 
 
 def bench_kernels():
@@ -39,6 +70,9 @@ def bench_kernels():
     Ae = convert(random_coo(0, (4096, 4096), 0.01), Format.ELL)
     rows.append(("kernel_ell_spmv_interp", _t(lambda: kops.ell_spmv(Ae, x)) * 1e6,
                  f"ref_us={_t(jax.jit(lambda a, v: core_spmv(a, v)), Ae, x) * 1e6:.0f}"))
+    Ac = convert(random_coo(2, (4096, 4096), 0.01), Format.CSR)
+    rows.append(("kernel_csr_spmv_interp", _t(lambda: kops.csr_spmv(Ac, x)) * 1e6,
+                 f"ref_us={_t(jax.jit(lambda a, v: core_spmv(a, v)), Ac, x) * 1e6:.0f}"))
     Ab = convert(random_coo(1, (1024, 1024), 0.1), Format.BSR, block_size=128)
     B = jnp.ones((1024, 128), jnp.float32)
     rows.append(("kernel_bsr_spmm_interp", _t(lambda: kops.bsr_spmm(Ab, B)) * 1e6,
@@ -48,10 +82,14 @@ def bench_kernels():
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default="")
+    p.add_argument("--only", default="",
+                   help="comma-separated suite names (default: all)")
     p.add_argument("--quick", action="store_true",
                    help="smaller sizes / fewer shard counts")
+    p.add_argument("--json-dir", default=".",
+                   help="where BENCH_spmv.json / BENCH_convert.json land")
     args = p.parse_args(argv)
+    only = tuple(s for s in args.only.split(",") if s)
 
     from benchmarks import bench_convert, bench_formats, bench_overhead, bench_scaling
 
@@ -63,22 +101,38 @@ def main(argv=None):
             sizes=((8, 8, 8), (16, 16, 16)) if args.quick else
             ((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48))),
         "convert": bench_convert.run,
+        "switch": lambda: bench_overhead.run_switch(
+            sizes=((8, 8, 8), (16, 16, 16)) if args.quick else
+            ((8, 8, 8), (16, 16, 16), (24, 24, 24))),
         "kernels": bench_kernels,
         "scaling": lambda: bench_scaling.run((1, 2, 4) if args.quick else (1, 2, 4, 8)),
     }
+    results = {}
     print("name,us_per_call,derived")
     for name, fn in suites.items():
-        if args.only and args.only != name:
+        if only and name not in only:
             continue
         try:
-            for r in fn():
+            results[name] = fn()
+            for r in results[name]:
                 print(",".join(str(c) for c in r))
                 sys.stdout.flush()
         except Exception as e:  # noqa: BLE001
             print(f"{name}_FAILED,0,{e!r}")
 
+    import jax
+    meta = {"backend": jax.default_backend(), "quick": bool(args.quick)}
+    spmv_rows = [r for s in SPMV_SUITES for r in results.get(s, ())]
+    convert_rows = [r for s in CONVERT_SUITES for r in results.get(s, ())]
+    if spmv_rows:
+        print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_spmv.json"),
+                                  spmv_rows, meta))
+    if convert_rows:
+        print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_convert.json"),
+                                  convert_rows, meta))
+
     # roofline table pointer (if the dry-run has produced results)
-    if not args.only or args.only == "roofline":
+    if not only or "roofline" in only:
         try:
             from benchmarks import roofline
             cells = roofline.load_cells("pod")

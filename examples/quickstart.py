@@ -3,10 +3,12 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import (DynamicMatrix, Format, SwitchDynamicMatrix, autotune,
-                        banded_coo, convert, random_coo, spmv, to_dense_np)
+                        banded_coo, convert, convert_execute, random_coo,
+                        spmv, to_dense_np)
 
 
 def main():
@@ -26,24 +28,34 @@ def main():
         print(f"  spmv in {fmt.name:5s}: max|y - y_coo| = "
               f"{float(jnp.abs(y - y_coo).max()):.2e}")
 
-    # 4. Let the auto-tuner pick the best format.
+    # 4. Plan/execute switching: the symbolic phase runs once, the numeric
+    #    phase is jit-able and never leaves the device — the cheap-switch
+    #    pipeline solvers use to re-format mid-run.
+    plan = dyn.plan(Format.DIA)
+    execute = jax.jit(convert_execute, static_argnums=1)
+    A_dia = execute(A, plan)  # compiled; re-runs at memory-bandwidth cost
+    print("planned switch ->", A_dia.format.name,
+          f"(ndiag={A_dia.ndiag}, zero host syncs)")
+
+    # 5. Let the auto-tuner pick the best format.
     report = autotune(A, x, mode="profile", iters=5)
     print("profile auto-tune:", report)
     report = autotune(A, mode="analytic")
     print("analytic auto-tune:", report)
 
-    # 5. SwitchDynamicMatrix: all formats resident, O(1) runtime dispatch
+    # 6. SwitchDynamicMatrix: all formats resident, O(1) runtime dispatch
     #    (this is what per-shard Multi-Format selection uses under SPMD).
     sw = SwitchDynamicMatrix.from_matrix(A, active=report.best)
     y = sw.spmv(x)
     print("switch-dispatch spmv matches:",
           bool(jnp.allclose(y, y_coo, rtol=1e-4, atol=1e-4)))
 
-    # 6. Pallas TPU kernels (interpret mode on CPU): backend="pallas".
-    Ad = convert(A, Format.DIA)
-    y_pallas = spmv(Ad, x, backend="pallas")
-    print("pallas DIA kernel matches:",
-          bool(jnp.allclose(y_pallas, y_coo, rtol=1e-4, atol=1e-4)))
+    # 7. Pallas TPU kernels (interpret mode on CPU): backend="pallas".
+    for fmt in (Format.DIA, Format.CSR):
+        Af = convert(A, fmt)
+        y_pallas = spmv(Af, x, backend="pallas")
+        print(f"pallas {fmt.name} kernel matches:",
+              bool(jnp.allclose(y_pallas, y_coo, rtol=1e-4, atol=1e-4)))
 
 
 if __name__ == "__main__":

@@ -1,20 +1,32 @@
 """Format conversions (paper §III-B "Convert" copy concept).
 
-Architecture: the classic sparse-library *symbolic/numeric* split, which is
-also the honest TPU adaptation of the paper's element-wise convert:
+Architecture: the classic sparse-library *symbolic/numeric* split, made
+first-class as an explicit two-phase **plan/execute** API:
 
-  * symbolic phase (host, numpy): analyse the sparsity *pattern* and produce
-    static capacities / offset tables / block structure;
-  * numeric phase (device, jit-able): pure gather/scatter of values into the
-    target layout.
+  * ``plan_switch`` (symbolic phase): analyse the sparsity *pattern* and
+    produce a :class:`SwitchPlan` of static capacities / offset tables /
+    block structure. The analysis runs on device (segment-sum / ``unique``
+    / compare primitives); only the tiny plan artifacts — a handful of
+    scalars, an offset list, a block map — cross to host, **once per
+    plan**. The pre-plan pipeline shipped every index array to numpy on
+    every ``DynamicMatrix.activate()``; that host round-trip was the
+    dominant cost of a format switch.
+  * ``convert_execute`` (numeric phase): a pure gather/scatter of values
+    into the target layout. Fully jit-able with *zero* device->host
+    transfers given a plan; plans are hashable and ride through
+    ``jax.jit`` as static arguments, so a solver can re-switch formats
+    inside a compiled step at memory-bandwidth cost.
 
-As in the paper, COO acts as the proxy format: any -> COO -> any. Fast paths
-exist where they fall out naturally (CSR<->COO order-preserving, ELL->COO).
+As in the paper, COO acts as the proxy format: any -> COO -> any. Fast
+paths exist where they fall out naturally (CSR<->COO order-preserving,
+ELL->COO). The one-shot helpers (``coo_to_ell`` etc.) remain as thin
+wrappers: hint missing -> plan on the fly; hint given -> validate +
+execute.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence
+import dataclasses
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +34,17 @@ import numpy as np
 
 from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
                                 coo_from_arrays)
+from repro.core.ops import csr_row_ids
+
+# Sentinel pushed past every valid diagonal offset / block id during the
+# device-side ``unique`` sweeps (offsets are < n <= int32 max; block grids
+# are validated against int32 before use).
+_SENTINEL = np.iinfo(np.int32).max
+
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
 
 # ---------------------------------------------------------------------------
 # any -> COO (device-friendly where the source layout permits)
@@ -30,10 +53,7 @@ from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
 
 def csr_to_coo(A: CSR) -> COO:
     """CSR -> COO. jit-able: recover row ids from the row-pointer array."""
-    cap = A.capacity
-    k = jnp.arange(cap, dtype=jnp.int32)
-    rows = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
-    rows = jnp.clip(rows, 0, A.shape[0] - 1)  # padded tail -> row 0-ish, val 0
+    rows = csr_row_ids(A.indptr, A.capacity, A.shape[0])
     return COO(rows, A.indices, A.data, A.shape, A.nnz)
 
 
@@ -41,7 +61,8 @@ def ell_to_coo(A: ELL) -> COO:
     """ELL -> COO. jit-able flatten; padding entries stay (0-valued)."""
     m, k = A.data.shape
     rows = jnp.repeat(jnp.arange(m, dtype=jnp.int32), k)
-    return COO(rows, A.cols.reshape(-1), A.data.reshape(-1), A.shape, A.nnz)
+    return COO(rows, jnp.clip(A.cols.reshape(-1), 0, A.shape[1] - 1),
+               A.data.reshape(-1), A.shape, A.nnz)
 
 
 def dia_to_coo(A: DIA) -> COO:
@@ -82,43 +103,22 @@ def hyb_to_coo(A: HYB) -> COO:
                jnp.concatenate([e.data, c.data]), A.shape, A.nnz)
 
 
-def coo_to_hyb(A: COO, k: Optional[int] = None) -> HYB:
-    """COO -> HYB. Symbolic: split each row at k entries (host); numeric:
-    jit-able scatters into the two parts. Default k = median row length."""
-    m, n = A.shape
-    r = np.asarray(A.row)
-    d = np.asarray(A.data)
-    live = d != 0
-    counts = np.bincount(r[live], minlength=m) if live.any() else np.zeros(m, int)
-    if k is None:
-        k = max(1, int(np.median(counts[counts > 0])) if (counts > 0).any() else 1)
-    # rank of each entry within its row (host, by first-seen order)
-    order = np.argsort(r, kind="stable")
-    rank = np.zeros(len(r), np.int64)
-    seen = {}
-    for pos in order:
-        rr = r[pos]
-        rank[pos] = seen.get(rr, 0)
-        seen[rr] = rank[pos] + 1
-    in_ell = (rank < k) & live
-    in_coo = (~in_ell) & live
-    ell = coo_to_ell(COO(A.row, A.col, jnp.where(jnp.asarray(in_ell), A.data, 0),
-                         A.shape, A.nnz), k=k)
-    coo_cap = max(1, int(in_coo.sum()))
-    idx = np.nonzero(in_coo)[0]
-    pad = np.zeros(coo_cap - len(idx), np.int64)
-    sel = jnp.asarray(np.concatenate([idx, pad]).astype(np.int32))
-    mask = jnp.asarray(np.concatenate([np.ones(len(idx)), np.zeros(len(pad))]).astype(bool))
-    coo = COO(jnp.where(mask, A.row[sel], 0), jnp.where(mask, A.col[sel], 0),
-              jnp.where(mask, A.data[sel], 0), A.shape, coo_cap)
-    return HYB(ell, coo, A.shape, A.nnz)
-
-
 def dense_to_coo(A: Dense, capacity: Optional[int] = None) -> COO:
-    """Dense -> COO. Host symbolic (nonzero is data-dependent)."""
-    a = np.asarray(A.data)
-    r, c = np.nonzero(a)
-    return coo_from_arrays(r, c, a[r, c], A.shape, capacity, a.dtype)
+    """Dense -> COO. With ``capacity`` (from a plan) the extraction is
+    jit-able and sync-free via ``jnp.nonzero(size=...)`` — capacity
+    validation is the plan phase's job; excess nonzeros truncate. Without
+    one, the nonzero count is pulled from device first (one scalar
+    sync)."""
+    cnt = jnp.count_nonzero(A.data)
+    if capacity is None:
+        capacity = max(1, int(cnt))
+    cap = int(capacity)
+    r, c = jnp.nonzero(A.data, size=cap, fill_value=0)
+    mask = jnp.arange(cap) < jnp.minimum(cnt, cap)
+    val = jnp.where(mask, A.data[r, c], 0)
+    r = jnp.where(mask, r, 0).astype(jnp.int32)
+    c = jnp.where(mask, c, 0).astype(jnp.int32)
+    return COO(r, c, val, A.shape, cap)
 
 
 def to_coo(A, capacity: Optional[int] = None) -> COO:
@@ -140,13 +140,176 @@ def to_coo(A, capacity: Optional[int] = None) -> COO:
 
 
 # ---------------------------------------------------------------------------
-# COO -> any
+# The symbolic phase: SwitchPlan / plan_switch
 # ---------------------------------------------------------------------------
 
 
-def _coo_host(A: COO):
-    """Pull the (tiny) index pattern to host for the symbolic phase."""
-    return np.asarray(A.row), np.asarray(A.col), np.asarray(A.data)
+@dataclasses.dataclass(frozen=True)
+class SwitchPlan:
+    """Output of the symbolic phase of a format switch.
+
+    Everything in here is *static* python data (ints and tuples), which
+    makes a plan hashable — pass it through ``jax.jit`` as a static
+    argument and the numeric phase compiles once per (shapes, plan) and
+    never touches host again. Plans are produced by :func:`plan_switch`
+    (or by the tuning policy via ``FormatPolicy.plan_for``) and consumed
+    by :func:`convert_execute`.
+    """
+
+    target: Format
+    ell_k: Optional[int] = None                       # ELL width / HYB split
+    dia_offsets: Optional[Tuple[int, ...]] = None     # occupied diagonals
+    block_size: Optional[int] = None                  # BSR block edge
+    bsr_indptr: Optional[Tuple[int, ...]] = None      # BSR block-row ptrs
+    bsr_indices: Optional[Tuple[int, ...]] = None     # BSR block columns
+    hyb_coo_capacity: Optional[int] = None            # HYB overflow slots
+    capacity: Optional[int] = None                    # Dense->COO extraction
+
+    def __post_init__(self):
+        object.__setattr__(self, "target", Format(self.target))
+
+
+def _live_row_counts(C: COO, live) -> jax.Array:
+    """Per-row count of live (non-zero) entries, on device."""
+    return jax.ops.segment_sum(live.astype(jnp.int32), C.row,
+                               num_segments=C.shape[0])
+
+
+def _unique_small(values, sentinel=_SENTINEL) -> np.ndarray:
+    """Device ``unique`` then pull only the compacted result to host.
+
+    The transfer is O(#unique) — an offset list or a block map — not
+    O(nnz) like the pre-plan host symbolic phase.
+    """
+    u = np.asarray(jnp.unique(values))
+    return u[u != sentinel]
+
+
+def plan_switch(A, fmt: Format, *, k: Optional[int] = None,
+                offsets: Optional[Sequence[int]] = None,
+                block_size: int = 128,
+                capacity: Optional[int] = None,
+                check: bool = True) -> SwitchPlan:
+    """Symbolic phase: compute the :class:`SwitchPlan` for ``A`` -> ``fmt``.
+
+    Pattern analysis (row counts, occupied diagonals, block structure)
+    runs on device; only the plan artifacts are pulled to host. Explicit
+    hints (``k=``, ``offsets=``, ``block_size=``) short-circuit the
+    analysis — that is how the tuning policy or a distributed builder
+    supplies a plan computed elsewhere.
+    """
+    fmt = Format(fmt)
+    if isinstance(A, Dense):
+        need = max(1, int(jnp.count_nonzero(A.data)))
+        if capacity is None:
+            capacity = need
+        elif int(capacity) < need:
+            raise ValueError(f"capacity {capacity} < {need} nonzeros")
+    if capacity is not None:
+        capacity = int(capacity)
+
+    if fmt in (Format.COO, Format.CSR, Format.DENSE):
+        return SwitchPlan(fmt, capacity=capacity)
+
+    C = to_coo(A, capacity=capacity)
+    m, n = C.shape
+    live = C.data != 0
+
+    if fmt == Format.ELL:
+        if k is None:
+            k = max(1, int(jnp.max(_live_row_counts(C, live))))
+        elif check and not _is_tracer(C.data):
+            kmax = int(jnp.max(_live_row_counts(C, live)))
+            if kmax > int(k):
+                raise ValueError(
+                    f"coo_to_ell: k={int(k)} but a row holds {kmax} live "
+                    f"entries; the overflow would be silently dropped. Pass "
+                    f"k>={kmax}, or use Format.HYB which spills overflow "
+                    f"into its COO part.")
+        return SwitchPlan(fmt, ell_k=int(k), capacity=capacity)
+
+    if fmt == Format.DIA:
+        if offsets is None:
+            diffs = jnp.where(live, C.col.astype(jnp.int32) - C.row.astype(jnp.int32),
+                              _SENTINEL)
+            offs = _unique_small(diffs)
+            offsets = offs if offs.size else np.array([0])
+        # the numeric phase routes entries with searchsorted, which needs
+        # ascending offsets; duplicates are kept (they are inert, and the
+        # distributed uniform-offsets builder pads with them deliberately)
+        offsets = tuple(int(o) for o in np.sort(np.asarray(offsets).ravel()))
+        return SwitchPlan(fmt, dia_offsets=offsets, capacity=capacity)
+
+    if fmt == Format.BSR:
+        bs = int(block_size)
+        if m % bs or n % bs:
+            raise ValueError(f"shape {C.shape} not a multiple of block size {bs}")
+        nbr, nbc = m // bs, n // bs
+        if nbr * nbc >= np.iinfo(np.int32).max:
+            raise ValueError("block grid too large for int32 block ids")
+        gid = jnp.where(live, (C.row // bs) * nbc + (C.col // bs), _SENTINEL)
+        blk = _unique_small(gid).astype(np.int64)
+        if blk.size == 0:
+            blk = np.zeros(1, np.int64)  # single inert zero block at (0, 0)
+        pbr, pbc = blk // nbc, blk % nbc
+        indptr = np.zeros(nbr + 1, np.int64)
+        np.add.at(indptr, pbr + 1, 1)
+        indptr = np.cumsum(indptr)
+        return SwitchPlan(fmt, block_size=bs,
+                          bsr_indptr=tuple(int(i) for i in indptr),
+                          bsr_indices=tuple(int(c) for c in pbc),
+                          capacity=capacity)
+
+    if fmt == Format.HYB:
+        counts = _live_row_counts(C, live)
+        if k is None:
+            k = _median_positive(counts, m)
+        k = max(1, int(k))
+        coo_cap = max(1, int(jnp.sum(jnp.maximum(counts - k, 0))))
+        return SwitchPlan(fmt, ell_k=k, hyb_coo_capacity=coo_cap,
+                          capacity=capacity)
+
+    raise ValueError(f"unknown format {fmt}")
+
+
+def _median_positive(counts, m: int) -> int:
+    """Median of the positive row counts, computed on device (one scalar
+    sync). Mirrors the historical ``np.median(counts[counts > 0])``."""
+    npos = int(jnp.sum(counts > 0))
+    if npos == 0:
+        return 1
+    s = jnp.sort(counts)
+    nz = m - npos
+    lo = min(nz + (npos - 1) // 2, m - 1)
+    hi = min(nz + npos // 2, m - 1)
+    return max(1, int((s[lo] + s[hi]) // 2))
+
+
+# ---------------------------------------------------------------------------
+# The numeric phase: convert_execute (fully jit-able given a plan)
+# ---------------------------------------------------------------------------
+
+
+def _row_slots(C: COO):
+    """Stable row sort + within-row slot of every *live* entry (device).
+
+    Slots rank live (non-zero) entries only: dead entries — capacity
+    padding, or explicit zeros interleaved with data as ``dia_to_coo``
+    emits for partially-filled diagonals — must not inflate the rank of
+    the live entries behind them, or ELL widths and HYB split capacities
+    (both derived from live counts) silently drop data. Dead entries get
+    a meaningless (possibly colliding) slot; callers mask them out.
+    """
+    m = C.shape[0]
+    order = jnp.argsort(C.row, stable=True)
+    rows, cols, data = C.row[order], C.col[order], C.data[order]
+    live = data != 0
+    live_counts = jax.ops.segment_sum(live.astype(jnp.int32), rows,
+                                      num_segments=m)
+    live_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(live_counts).astype(jnp.int32)])[:-1]
+    slot = jnp.cumsum(live.astype(jnp.int32)) - 1 - live_starts[rows]
+    return rows, cols, data, slot, live
 
 
 def coo_to_csr(A: COO) -> CSR:
@@ -162,40 +325,34 @@ def coo_to_csr(A: COO) -> CSR:
     return CSR(indptr, A.col[order], A.data[order], A.shape, A.nnz)
 
 
-def coo_to_ell(A: COO, k: Optional[int] = None) -> ELL:
-    """COO -> ELL. Symbolic: max row length K (host unless given); numeric:
-    jit-able scatter into the (M, K) planes."""
+def _coo_to_ell_exec(A: COO, k: int) -> ELL:
+    """ELL numeric phase: jit-able scatter into the (M, K) planes."""
     m = A.shape[0]
-    if k is None:
-        r, _, d = _coo_host(A)
-        live = np.asarray(d) != 0
-        k = int(np.bincount(r[live], minlength=m).max()) if live.any() else 1
-        k = max(k, 1)
-    order = jnp.argsort(A.row, stable=True)
-    rows, cols, data = A.row[order], A.col[order], A.data[order]
-    # slot within row = position - start of row
-    counts = jnp.bincount(rows, length=m)
-    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])[:-1]
-    slot = jnp.arange(rows.shape[0], dtype=jnp.int32) - starts[rows]
-    # zero-valued (padding) entries all map to row 0; push them out of range.
-    # ELL padding sentinel is col=-1 (gathers clip to 0, data=0 keeps it
-    # inert; -1 can never collide with a real diagonal position).
-    dead = data == 0
-    slot = jnp.where(dead, k, slot)  # row-0 overflow guard, dropped below
+    k = int(k)
+    rows, cols, data, slot, live = _row_slots(A)
+    # zero-valued (dead) entries carry meaningless slots; park them in the
+    # guard column dropped below. ELL padding sentinel is col=-1 (gathers
+    # clip to 0, data=0 keeps it inert; -1 can never collide with a real
+    # diagonal position).
+    dead = ~live
+    slot = jnp.where(dead, k, slot)
     cols_plane = jnp.full((m, k + 1), -1, jnp.int32).at[rows, jnp.clip(slot, 0, k)].set(jnp.where(dead, -1, cols))
     data_plane = jnp.zeros((m, k + 1), A.dtype).at[rows, jnp.clip(slot, 0, k)].add(jnp.where(dead, 0, data))
     return ELL(cols_plane[:, :k], data_plane[:, :k], A.shape, A.nnz)
 
 
-def coo_to_dia(A: COO, offsets: Optional[Sequence[int]] = None) -> DIA:
-    """COO -> DIA. Symbolic: the set of occupied diagonals (host unless
-    given); numeric: jit-able scatter into the (ndiag, M) table."""
+def coo_to_ell(A: COO, k: Optional[int] = None, *, check: bool = True) -> ELL:
+    """COO -> ELL. ``k`` missing -> planned on the fly; ``k`` given ->
+    validated (live entries beyond slot ``k`` would otherwise be silently
+    dropped) unless ``check=False`` or the data is a tracer (a jitted
+    caller must pass a validated plan/width)."""
+    plan = plan_switch(A, Format.ELL, k=k, check=check)
+    return _coo_to_ell_exec(A, plan.ell_k)
+
+
+def _coo_to_dia_exec(A: COO, offsets: Sequence[int]) -> DIA:
+    """DIA numeric phase: jit-able scatter into the (ndiag, M) table."""
     m, n = A.shape
-    if offsets is None:
-        r, c, d = _coo_host(A)
-        live = np.asarray(d) != 0
-        offs = np.unique((c - r)[live]) if live.any() else np.array([0])
-        offsets = offs.astype(np.int64)
     offsets_arr = jnp.asarray(np.asarray(offsets, np.int32))
     nd = int(offsets_arr.shape[0])
     k = (A.col - A.row).astype(jnp.int32)
@@ -206,39 +363,81 @@ def coo_to_dia(A: COO, offsets: Optional[Sequence[int]] = None) -> DIA:
     return DIA(offsets_arr, data, A.shape, A.nnz)
 
 
-def coo_to_bsr(A: COO, block_size: int = 128, plan=None) -> BSR:
-    """COO -> BSR. Symbolic: block structure on host; numeric: jit scatter."""
+def coo_to_dia(A: COO, offsets: Optional[Sequence[int]] = None) -> DIA:
+    """COO -> DIA. Symbolic: the set of occupied diagonals (planned unless
+    given, sorted ascending); numeric: jit-able scatter."""
+    plan = plan_switch(A, Format.DIA, offsets=offsets)
+    return _coo_to_dia_exec(A, plan.dia_offsets)
+
+
+def _coo_to_bsr_exec(A: COO, plan: SwitchPlan) -> BSR:
+    """BSR numeric phase: jit scatter of entries into their blocks. The
+    block map rides in the plan and lowers to on-device constants."""
     m, n = A.shape
-    bs = block_size
-    if m % bs or n % bs:
-        raise ValueError(f"shape {A.shape} not a multiple of block size {bs}")
-    if plan is None:
-        r, c, d = _coo_host(A)
-        live = np.asarray(d) != 0
-        br, bc = r[live] // bs, c[live] // bs
-        blk = np.unique(br.astype(np.int64) * (n // bs) + bc)
-        pbr, pbc = blk // (n // bs), blk % (n // bs)
-        indptr = np.zeros(m // bs + 1, np.int32)
-        np.add.at(indptr, pbr + 1, 1)
-        indptr = np.cumsum(indptr).astype(np.int32)
-        plan = (indptr, pbc.astype(np.int32), blk)
-    indptr_np, bcol_np, blk_np = plan
+    bs = plan.block_size
+    nbc = n // bs
+    bcol_np = np.asarray(plan.bsr_indices, np.int32)
+    indptr_np = np.asarray(plan.bsr_indptr, np.int32)
+    brow_np = np.repeat(np.arange(len(indptr_np) - 1, dtype=np.int64),
+                        np.diff(indptr_np))
+    blk_sorted = brow_np * nbc + bcol_np.astype(np.int64)
     nblk = max(1, len(bcol_np))
-    # host map: global block id -> slot
-    blk_sorted = np.asarray(blk_np, np.int64)
-    if blk_sorted.size and blk_sorted.max() >= np.iinfo(np.int32).max:
-        raise ValueError("block grid too large for int32 block ids")
     blk_lut = jnp.asarray(blk_sorted.astype(np.int32))
-    gid = (A.row // bs) * (n // bs) + A.col // bs
+    gid = (A.row // bs) * nbc + A.col // bs
     slot = jnp.searchsorted(blk_lut, gid).astype(jnp.int32)
     slot = jnp.clip(slot, 0, nblk - 1)
     hit = blk_lut[slot] == gid
     bi = (A.row % bs).astype(jnp.int32)
     bj = (A.col % bs).astype(jnp.int32)
     data = jnp.zeros((nblk, bs, bs), A.dtype).at[slot, bi, bj].add(jnp.where(hit, A.data, 0))
-    indptr = jnp.asarray(indptr_np if len(bcol_np) else np.zeros(m // bs + 1, np.int32))
-    bcol = jnp.asarray(bcol_np if len(bcol_np) else np.zeros(1, np.int32))
-    return BSR(indptr, bcol, data, A.shape, A.nnz, bs)
+    return BSR(jnp.asarray(indptr_np), jnp.asarray(bcol_np), data, A.shape,
+               A.nnz, bs)
+
+
+def coo_to_bsr(A: COO, block_size: int = 128, plan=None) -> BSR:
+    """COO -> BSR. ``plan`` may be a :class:`SwitchPlan` or the legacy
+    ``(indptr, bcol, blk)`` numpy triple."""
+    if plan is None:
+        plan = plan_switch(A, Format.BSR, block_size=block_size)
+    elif not isinstance(plan, SwitchPlan):
+        indptr_np, bcol_np, _blk = plan
+        plan = SwitchPlan(Format.BSR, block_size=int(block_size),
+                          bsr_indptr=tuple(int(i) for i in np.asarray(indptr_np)),
+                          bsr_indices=tuple(int(c) for c in np.asarray(bcol_np)))
+    return _coo_to_bsr_exec(A, plan)
+
+
+def _coo_to_hyb_exec(A: COO, k: int, coo_cap: int) -> HYB:
+    """HYB numeric phase: one stable row sort, then jit-able scatters into
+    the ELL planes (within-row rank < k) and the COO overflow arrays.
+
+    The overflow capacity is static (from the plan); overflow entries are
+    compacted with a cumsum and any excess past ``coo_cap`` lands in a
+    dropped guard slot.
+    """
+    m, n = A.shape
+    k, coo_cap = int(k), int(coo_cap)
+    rows, cols, data, slot, live = _row_slots(A)
+    in_ell = (slot < k) & live
+    in_coo = (~in_ell) & live
+    ell_slot = jnp.where(in_ell, slot, k)
+    cols_plane = jnp.full((m, k + 1), -1, jnp.int32).at[rows, jnp.clip(ell_slot, 0, k)].set(jnp.where(in_ell, cols, -1))
+    data_plane = jnp.zeros((m, k + 1), A.dtype).at[rows, jnp.clip(ell_slot, 0, k)].add(jnp.where(in_ell, data, 0))
+    ell = ELL(cols_plane[:, :k], data_plane[:, :k], A.shape, A.nnz)
+    pos = jnp.cumsum(in_coo.astype(jnp.int32)) - 1
+    pos = jnp.clip(jnp.where(in_coo, pos, coo_cap), 0, coo_cap)
+    crow = jnp.zeros((coo_cap + 1,), jnp.int32).at[pos].set(jnp.where(in_coo, rows, 0))[:coo_cap]
+    ccol = jnp.zeros((coo_cap + 1,), jnp.int32).at[pos].set(jnp.where(in_coo, cols, 0))[:coo_cap]
+    cdat = jnp.zeros((coo_cap + 1,), A.dtype).at[pos].set(jnp.where(in_coo, data, 0))[:coo_cap]
+    coo = COO(crow, ccol, cdat, A.shape, coo_cap)
+    return HYB(ell, coo, A.shape, A.nnz)
+
+
+def coo_to_hyb(A: COO, k: Optional[int] = None) -> HYB:
+    """COO -> HYB. Symbolic: split each row at k entries (planned; default
+    k = median positive row length); numeric: jit-able scatters."""
+    plan = plan_switch(A, Format.HYB, k=k)
+    return _coo_to_hyb_exec(A, plan.ell_k, plan.hyb_coo_capacity)
 
 
 def coo_to_dense(A: COO) -> Dense:
@@ -248,34 +447,55 @@ def coo_to_dense(A: COO) -> Dense:
     return Dense(out, A.shape, A.nnz)
 
 
-# ---------------------------------------------------------------------------
-# The paper's convert(): any -> any via the COO proxy
-# ---------------------------------------------------------------------------
-
-
-def convert(A, fmt: Format, **kwargs):
-    """Element-wise conversion between any two formats via the COO proxy.
-
-    ``kwargs`` forward symbolic hints (``k=`` for ELL, ``offsets=`` for DIA,
-    ``block_size=`` for BSR, ``capacity=`` for COO) so the call can be made
-    fully jit-able when the plan is known.
+def convert_execute(A, plan: SwitchPlan):
+    """Numeric phase of the paper's convert(): any -> ``plan.target`` via
+    the COO proxy, with every shape-determining quantity taken from the
+    plan. jit-able with ``plan`` as a static argument; performs zero
+    device->host transfers.
     """
-    fmt = Format(fmt)
-    if getattr(A, "format", None) == fmt and not kwargs:
-        return A
-    C = to_coo(A, capacity=kwargs.pop("capacity", None))
+    fmt = Format(plan.target)
+    C = to_coo(A, capacity=plan.capacity)
     if fmt == Format.COO:
         return C
     if fmt == Format.CSR:
         return coo_to_csr(C)
     if fmt == Format.ELL:
-        return coo_to_ell(C, k=kwargs.get("k"))
+        return _coo_to_ell_exec(C, plan.ell_k)
     if fmt == Format.DIA:
-        return coo_to_dia(C, offsets=kwargs.get("offsets"))
+        return _coo_to_dia_exec(C, plan.dia_offsets)
     if fmt == Format.BSR:
-        return coo_to_bsr(C, block_size=kwargs.get("block_size", 128), plan=kwargs.get("plan"))
+        return _coo_to_bsr_exec(C, plan)
     if fmt == Format.HYB:
-        return coo_to_hyb(C, k=kwargs.get("k"))
+        return _coo_to_hyb_exec(C, plan.ell_k, plan.hyb_coo_capacity)
     if fmt == Format.DENSE:
         return coo_to_dense(C)
     raise ValueError(f"unknown format {fmt}")
+
+
+# ---------------------------------------------------------------------------
+# The paper's convert(): any -> any via the COO proxy
+# ---------------------------------------------------------------------------
+
+
+def convert(A, fmt: Format, plan: Optional[SwitchPlan] = None, **kwargs):
+    """Element-wise conversion between any two formats via the COO proxy.
+
+    With ``plan`` (a precomputed :class:`SwitchPlan`) the call is the pure
+    numeric phase — jit-able, zero host syncs. Without one, the symbolic
+    hints in ``kwargs`` (``k=`` for ELL/HYB, ``offsets=`` for DIA,
+    ``block_size=`` for BSR, ``capacity=`` for Dense sources) seed
+    :func:`plan_switch` and the plan is computed on the fly.
+    """
+    fmt = Format(fmt)
+    if plan is not None:
+        if not isinstance(plan, SwitchPlan):
+            if fmt == Format.BSR:  # legacy (indptr, bcol, blk) triple
+                return coo_to_bsr(to_coo(A), kwargs.get("block_size", 128),
+                                  plan=plan)
+            raise TypeError(f"plan must be a SwitchPlan, got {type(plan)}")
+        if Format(plan.target) != fmt:
+            raise ValueError(f"plan targets {Format(plan.target).name}, not {fmt.name}")
+        return convert_execute(A, plan)
+    if getattr(A, "format", None) == fmt and not kwargs:
+        return A
+    return convert_execute(A, plan_switch(A, fmt, **kwargs))

@@ -25,6 +25,20 @@ from repro.core.formats import BSR, COO, CSR, DIA, ELL, Dense, HYB
 # ---------------------------------------------------------------------------
 
 
+def csr_row_ids(indptr, capacity: int, m: int):
+    """Per-entry row ids of a capacity-padded CSR layout (jit-able).
+
+    The TPU replacement for a warp-per-row walk: recover every stored
+    entry's row from the row-pointer array in one vectorised searchsorted.
+    Padding entries past ``indptr[-1]`` clip to row ``m - 1`` (their values
+    are zero, so they are inert under accumulate semantics). Shared by the
+    reference SpMV/SpMM, the CSR Pallas wrapper, and CSR -> COO conversion.
+    """
+    k = jnp.arange(capacity, dtype=jnp.int32)
+    rows = jnp.searchsorted(indptr, k, side="right").astype(jnp.int32) - 1
+    return jnp.clip(rows, 0, m - 1)
+
+
 def _spmv_coo(A: COO, x):
     contrib = A.data * jnp.take(x, A.col, mode="clip")
     return jax.ops.segment_sum(contrib, A.row, num_segments=A.shape[0])
@@ -33,10 +47,7 @@ def _spmv_coo(A: COO, x):
 def _spmv_csr(A: CSR, x):
     # TPU adaptation: no warp-per-row — recover row ids from indptr and use a
     # vectorised gather + segment reduction (see DESIGN.md §2).
-    cap = A.capacity
-    k = jnp.arange(cap, dtype=jnp.int32)
-    rows = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
-    rows = jnp.clip(rows, 0, A.shape[0] - 1)
+    rows = csr_row_ids(A.indptr, A.capacity, A.shape[0])
     contrib = A.data * jnp.take(x, A.indices, mode="clip")
     return jax.ops.segment_sum(contrib, rows, num_segments=A.shape[0])
 
@@ -99,7 +110,7 @@ _SPMV = {COO: _spmv_coo, CSR: _spmv_csr, DIA: _spmv_dia, ELL: _spmv_ell,
 
 def spmv(A, x, backend: str = "ref"):
     """y = A @ x. ``backend='ref'`` pure-jnp; ``'pallas'`` TPU kernels where
-    available (DIA/ELL/BSR), falling back to ref otherwise."""
+    available (CSR/DIA/ELL/BSR/HYB), falling back to ref otherwise."""
     if backend == "pallas":
         from repro.kernels import ops as kops  # lazy: keep core import-light
         fn = kops.SPMV_PALLAS.get(type(A))
@@ -121,10 +132,7 @@ def _spmm_coo(A: COO, B):
 
 
 def _spmm_csr(A: CSR, B):
-    cap = A.capacity
-    k = jnp.arange(cap, dtype=jnp.int32)
-    rows = jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1
-    rows = jnp.clip(rows, 0, A.shape[0] - 1)
+    rows = csr_row_ids(A.indptr, A.capacity, A.shape[0])
     contrib = A.data[:, None] * jnp.take(B, A.indices, axis=0, mode="clip")
     return jax.ops.segment_sum(contrib, rows, num_segments=A.shape[0])
 
@@ -220,9 +228,7 @@ def update_diagonal(A, new_diag):
         on = (A.row == A.col)
         return COO(A.row, A.col, jnp.where(on, jnp.take(new_diag, jnp.clip(A.row, 0, new_diag.shape[0] - 1), mode="clip"), A.data), A.shape, A.nnz)
     if isinstance(A, CSR):
-        cap = A.capacity
-        k = jnp.arange(cap, dtype=jnp.int32)
-        rows = jnp.clip(jnp.searchsorted(A.indptr, k, side="right").astype(jnp.int32) - 1, 0, A.shape[0] - 1)
+        rows = csr_row_ids(A.indptr, A.capacity, A.shape[0])
         on = A.indices == rows
         return CSR(A.indptr, A.indices, jnp.where(on, jnp.take(new_diag, rows, mode="clip"), A.data), A.shape, A.nnz)
     if isinstance(A, DIA):

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: CSR-format SpMV — the paper's reference format.
+
+CSR's row walk is serial on paper but the layout is still the densest
+general-purpose encoding, so the reference format deserves a real kernel
+rather than the pure-jnp segment-sum fallback. The TPU derivation
+(DESIGN.md §2, §8) replaces the GPU's warp-per-row trick with:
+
+  * grid over row tiles of ``tm`` rows; the row-pointer array rides in
+    SMEM via scalar prefetch and bounds each tile's nnz window
+    ``[indptr[row0], indptr[row0 + tm])``;
+  * the window streams through in fixed ``tk``-entry chunks via ``pl.ds``
+    dynamic-start loads from the VMEM-resident value/index arrays (the
+    trip count is the tile's own nnz — load imbalance costs a tile only
+    its actual entries, which is what makes this an *nnz-partitioned*
+    schedule rather than a padded one);
+  * per chunk: VPU gather of x at the stored columns, f32 multiply, then
+    a segment reduction onto the tile's rows expressed as a one-hot
+    (tk, tm) matmul — the MXU replacement for scatter-add, which Mosaic
+    does not vectorise;
+  * f32 accumulation throughout, cast to the output dtype once.
+
+Preconditions handled by the ``repro.kernels.ops`` wrapper: per-entry row
+ids are precomputed on device (one searchsorted over indptr — jit-able,
+fused with the caller), and the wrapper falls back to the reference path
+when the nnz arrays + x exceed the VMEM residency budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _csr_kernel(indptr_ref, rows_ref, indices_ref, data_ref, x_ref, y_ref,
+                *, tm: int, tk: int):
+    i = pl.program_id(0)
+    row0 = i * tm
+    start = indptr_ref[row0]
+    end = indptr_ref[row0 + tm]
+    x = x_ref[...]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tk, 1), 0)[:, 0]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (tk, tm), 1)
+
+    def window(w, acc):
+        base = start + w * tk
+        live = (base + lane) < end
+        cols = pl.load(indices_ref, (pl.ds(base, tk),))
+        vals = pl.load(data_ref, (pl.ds(base, tk),))
+        rws = pl.load(rows_ref, (pl.ds(base, tk),))
+        gathered = jnp.take(x, cols, mode="clip").astype(jnp.float32)
+        contrib = jnp.where(live, vals.astype(jnp.float32) * gathered, 0.0)
+        # segment-sum onto the tile's rows as a one-hot MXU matmul
+        onehot = ((rws - row0)[:, None] == row_iota).astype(jnp.float32)
+        return acc + jnp.dot(contrib[None, :], onehot,
+                             preferred_element_type=jnp.float32)[0]
+
+    nwin = (end - start + tk - 1) // tk  # this tile's own nnz, in chunks
+    acc = jax.lax.fori_loop(0, nwin, window, jnp.zeros((tm,), jnp.float32))
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "interpret"))
+def csr_spmv(indptr: jax.Array, rows: jax.Array, indices: jax.Array,
+             data: jax.Array, x: jax.Array, tm: int = 256, tk: int = 512,
+             interpret: bool = True) -> jax.Array:
+    """y = A @ x for CSR A given as (indptr[M+1], indices[cap], data[cap]).
+
+    ``rows`` is the precomputed per-entry row id array (see
+    ``repro.core.ops.csr_row_ids``); capacity padding past ``indptr[-1]``
+    is never read because every tile stops at its own window end.
+    """
+    m = indptr.shape[0] - 1
+    cap = data.shape[0]
+    mp = ((m + tm - 1) // tm) * tm
+    indptr = indptr.astype(jnp.int32)
+    if mp != m:
+        # padded rows are empty: their window [indptr[-1], indptr[-1]) is nil
+        indptr = jnp.concatenate(
+            [indptr, jnp.broadcast_to(indptr[-1], (mp - m,))])
+    # window loads start anywhere in [0, end); pad so the last chunk of the
+    # last window stays in bounds for any start alignment.
+    capp = ((cap + tk - 1) // tk) * tk + tk
+    rows = jnp.pad(rows, (0, capp - cap))
+    indices = jnp.pad(indices, (0, capp - cap))
+    data = jnp.pad(data, (0, capp - cap))
+
+    grid = (mp // tm,)
+    kernel = functools.partial(_csr_kernel, tm=tm, tk=tk)
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(rows.shape, lambda i, *_: (0,)),
+                pl.BlockSpec(indices.shape, lambda i, *_: (0,)),
+                pl.BlockSpec(data.shape, lambda i, *_: (0,)),
+                pl.BlockSpec(x.shape, lambda i, *_: (0,)),
+            ],
+            out_specs=pl.BlockSpec((tm,), lambda i, *_: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((mp,), x.dtype),
+        interpret=interpret,
+    )(indptr, rows, indices, data, x)
+    return y[:m]

@@ -1,7 +1,11 @@
 """jit'd wrappers binding the Pallas kernels to the core containers.
 
 ``INTERPRET`` is True off-TPU: the kernel bodies execute in Python on CPU
-(correctness validation); on TPU the same code lowers through Mosaic.
+(correctness validation); on TPU the same code lowers through Mosaic. The
+``REPRO_FORCE_INTERPRET=0|1`` environment variable overrides the TPU
+detection in either direction — re-read on every call, so tests/CI can
+exercise the compiled-path plumbing (or pin interpret mode on a TPU host)
+without monkeypatching module state.
 
 Wrappers enforce each kernel's structural preconditions and fall back to the
 pure-jnp reference path when they do not hold (e.g. x too large for VMEM
@@ -11,17 +15,36 @@ correct answer either way.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BSR, DIA, ELL
+from repro.core.formats import BSR, CSR, DIA, ELL, HYB
 from repro.kernels import bsr_spmm as _bsr
+from repro.kernels import csr_spmv as _csr
 from repro.kernels import dia_spmv as _dia
 from repro.kernels import ell_spmv as _ell
 
-INTERPRET = jax.default_backend() != "tpu"
+
+def _env_interpret():
+    v = os.environ.get("REPRO_FORCE_INTERPRET", "").strip()
+    if v in ("0", "1"):
+        return v == "1"
+    return None
+
+
+_DETECTED = jax.default_backend() != "tpu"
+INTERPRET = _env_interpret() if _env_interpret() is not None else _DETECTED
+
+
+def interpret_mode() -> bool:
+    """Effective interpret flag: ``REPRO_FORCE_INTERPRET`` (if set) wins
+    over the import-time TPU detection baked into ``INTERPRET``."""
+    env = _env_interpret()
+    return INTERPRET if env is None else env
+
 
 # VMEM residency budget for the x vector (bytes); beyond this the wrappers
 # fall back to the reference path (v5e has ~16 MiB VMEM per core).
@@ -33,14 +56,47 @@ def dia_spmv(A: DIA, x: jax.Array, tm: int = 512) -> jax.Array:
     if (n + 2 * (A.data.shape[1] + tm)) * x.dtype.itemsize > X_VMEM_BUDGET:
         from repro.core import ops as core_ops
         return core_ops._spmv_dia(A, x)
-    return _dia.dia_spmv(A.offsets, A.data, x, n, tm=tm, interpret=INTERPRET)
+    return _dia.dia_spmv(A.offsets, A.data, x, n, tm=tm, interpret=interpret_mode())
 
 
 def ell_spmv(A: ELL, x: jax.Array, tm: int = 256) -> jax.Array:
     if x.size * x.dtype.itemsize > X_VMEM_BUDGET:
         from repro.core import ops as core_ops
         return core_ops._spmv_ell(A, x)
-    return _ell.ell_spmv(A.cols, A.data, x, tm=tm, interpret=INTERPRET)
+    return _ell.ell_spmv(A.cols, A.data, x, tm=tm, interpret=interpret_mode())
+
+
+def csr_spmv(A: CSR, x: jax.Array, tm: int = 256, tk: int = 512) -> jax.Array:
+    """CSR SpMV via the row-tiled Pallas kernel; the (rows, indices, data)
+    arrays plus x must fit the VMEM residency budget, else ref fallback."""
+    from repro.core import ops as core_ops
+    resident = (3 * A.capacity + x.size) * 4
+    if resident > X_VMEM_BUDGET:
+        return core_ops._spmv_csr(A, x)
+    rows = core_ops.csr_row_ids(A.indptr, A.capacity, A.shape[0])
+    return _csr.csr_spmv(A.indptr, rows, A.indices, A.data, x, tm=tm, tk=tk,
+                         interpret=interpret_mode())
+
+
+def hyb_spmv(A: HYB, x: jax.Array) -> jax.Array:
+    """HYB SpMV: ELL kernel for the regular planes + the CSR kernel for the
+    COO overflow tail. The tail's row ids are already in hand, so the CSR
+    layout is assembled directly (stable sort + bincount row pointers, no
+    searchsorted row recovery); everything fuses with the caller under jit,
+    and plan-built tails are already row-sorted so the sort is cheap."""
+    from repro.core import ops as core_ops
+    y = ell_spmv(A.ell, x)
+    c = A.coo
+    if (3 * c.capacity + x.size) * 4 > X_VMEM_BUDGET:
+        return y + core_ops._spmv_coo(c, x)
+    order = jnp.argsort(c.row, stable=True)
+    rows = c.row[order]
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jnp.bincount(rows, length=A.shape[0])).astype(jnp.int32)])
+    tail = _csr.csr_spmv(indptr, rows, c.col[order], c.data[order], x,
+                         interpret=interpret_mode())
+    return y + tail
 
 
 def _bsr_brow(A: BSR):
@@ -62,7 +118,7 @@ def bsr_spmm(A: BSR, B: jax.Array, tn: int = 128) -> jax.Array:
         return core_ops._spmm_bsr(A, B)
     brow = _bsr_brow(A)
     return _bsr.bsr_spmm(A.indptr, brow, A.indices, A.data, B, A.shape[0],
-                         tn=tn, interpret=INTERPRET)
+                         tn=tn, interpret=interpret_mode())
 
 
 def bsr_spmv(A: BSR, x: jax.Array, tn: int = 128) -> jax.Array:
@@ -70,5 +126,6 @@ def bsr_spmv(A: BSR, x: jax.Array, tn: int = 128) -> jax.Array:
 
 
 # Registries consumed by repro.core.ops.spmv/spmm(backend="pallas").
-SPMV_PALLAS = {DIA: dia_spmv, ELL: ell_spmv, BSR: bsr_spmv}
+SPMV_PALLAS = {DIA: dia_spmv, ELL: ell_spmv, BSR: bsr_spmv, CSR: csr_spmv,
+               HYB: hyb_spmv}
 SPMM_PALLAS = {BSR: bsr_spmm}

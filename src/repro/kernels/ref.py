@@ -30,6 +30,20 @@ def ell_spmv_ref(cols: jax.Array, data: jax.Array, x: jax.Array) -> jax.Array:
     return acc.astype(x.dtype)
 
 
+def csr_spmv_ref(indptr: jax.Array, indices: jax.Array, data: jax.Array,
+                 x: jax.Array, m: int) -> jax.Array:
+    """y[i] = sum_{p in [indptr[i], indptr[i+1])} data[p] * x[indices[p]]
+    (f32 accumulation; capacity padding past indptr[-1] is inert)."""
+    cap = data.shape[0]
+    k = jnp.arange(cap, dtype=jnp.int32)
+    rows = jnp.searchsorted(indptr, k, side="right").astype(jnp.int32) - 1
+    live = (rows >= 0) & (k < indptr[-1])
+    rows = jnp.clip(rows, 0, m - 1)
+    contrib = data.astype(jnp.float32) * jnp.take(x, indices, mode="clip").astype(jnp.float32)
+    acc = jax.ops.segment_sum(jnp.where(live, contrib, 0.0), rows, num_segments=m)
+    return acc.astype(x.dtype)
+
+
 def bsr_spmm_ref(indptr: jax.Array, indices: jax.Array, blocks: jax.Array,
                  B: jax.Array, m: int) -> jax.Array:
     """Y = A @ B for block-CSR A with (bs x bs) blocks; B is (N, K)."""

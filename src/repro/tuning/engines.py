@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.convert import convert as _convert_fn
+from repro.core.convert import convert_execute, plan_switch
 from repro.core import ops as _ops
 from repro.core.dynamic import DynamicMatrix
 from repro.core.formats import Format
@@ -150,7 +150,11 @@ def profile_select(A, x,
     for fmt in candidates:
         fmt = Format(fmt)
         try:
-            Af = _convert_fn(A, fmt, **conv_kwargs.get(fmt, {}))
+            # plan once (symbolic, one small sync), then build the candidate
+            # with the device-resident numeric phase — profiling never ships
+            # index arrays through host.
+            plan = plan_switch(A, fmt, **conv_kwargs.get(fmt, {}))
+            Af = convert_execute(A, plan)
         except (ValueError, MemoryError) as e:
             # e.g. BSR on a non-block-aligned shape
             skipped[fmt.name] = f"{type(e).__name__}: {e}"

@@ -26,7 +26,8 @@ from typing import Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.convert import to_coo as _to_coo_fn
+from repro.core.convert import (SwitchPlan, plan_switch as _plan_switch,
+                                to_coo as _to_coo_fn)
 from repro.core.dynamic import DEFAULT_CANDIDATES, DynamicMatrix
 from repro.core.formats import Format
 from repro.tuning.cache import SelectionCache
@@ -106,6 +107,19 @@ class FormatPolicy:
         return TuneReport(rep.best, rep.times, f"cached-miss:{rep.mode}")
 
     __call__ = select
+
+    def plan_for(self, A, fmt=None, x=None, **hints) -> SwitchPlan:
+        """Select a format for ``A`` (unless ``fmt`` is given) and return
+        the :class:`SwitchPlan` the jit-able numeric phase needs — the
+        policy-supplied half of the plan/execute switch pipeline.
+
+        ``hints`` (``k=``, ``offsets=``, ``block_size=``, ...) forward to
+        ``plan_switch`` and short-circuit the device analysis.
+        """
+        A = A.concrete if isinstance(A, DynamicMatrix) else A
+        if fmt is None:
+            fmt = self.select(A, x=x).best
+        return _plan_switch(A, Format(fmt), **hints)
 
     def _select_ml(self, feats: PatternFeatures) -> TuneReport:
         tree = self.tree

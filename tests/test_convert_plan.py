@@ -1,0 +1,212 @@
+"""Plan/execute format switching: jit-ability, zero host syncs, validation.
+
+The acceptance bar for the device-resident switch pipeline: given a
+precomputed ``SwitchPlan``, ``convert_execute`` must trace under ``jax.jit``
+(plan as a static argument) and run with device->host transfers disallowed,
+for every COO -> {CSR, ELL, DIA, BSR, HYB} conversion.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DynamicMatrix, Format, SwitchDynamicMatrix,
+                        SwitchPlan, convert, convert_execute, dense_from_array,
+                        plan_switch, random_coo, to_dense_np)
+from repro.core.convert import coo_to_ell
+
+PLANNED = [Format.CSR, Format.ELL, Format.DIA, Format.BSR, Format.HYB]
+
+
+def _mat(seed=0, shape=(300, 200), density=0.05, capacity=None):
+    return random_coo(seed, shape, density=density, capacity=capacity)
+
+
+def _bsr_kw(fmt, shape):
+    return {"block_size": 100} if fmt == Format.BSR else {}
+
+
+@pytest.mark.parametrize("fmt", PLANNED)
+def test_execute_jits_with_no_host_transfer(fmt):
+    A = _mat(0, capacity=4000)
+    plan = plan_switch(A, fmt, **_bsr_kw(fmt, A.shape))
+    ex = jax.jit(convert_execute, static_argnums=1)
+    with jax.transfer_guard_device_to_host("disallow"):
+        out = ex(A, plan)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    np.testing.assert_allclose(to_dense_np(out), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", PLANNED)
+def test_plan_is_static_and_reusable(fmt):
+    """Same plan on two same-pattern matrices -> one trace, both correct."""
+    A = _mat(1)
+    B = type(A)(A.row, A.col, A.data * 3.0, A.shape, A.nnz)
+    plan = plan_switch(A, fmt, **_bsr_kw(fmt, A.shape))
+    assert isinstance(hash(plan), int)
+    assert plan == plan_switch(A, fmt, **_bsr_kw(fmt, A.shape))
+    ex = jax.jit(convert_execute, static_argnums=1)
+    np.testing.assert_allclose(to_dense_np(ex(A, plan)), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(to_dense_np(ex(B, plan)), 3 * to_dense_np(A),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dense_source_jits_with_planned_capacity():
+    rng = np.random.default_rng(2)
+    a = np.where(rng.random((64, 48)) < 0.1, 1.0, 0.0).astype(np.float32)
+    D = dense_from_array(a)
+    plan = plan_switch(D, Format.CSR)
+    assert plan.capacity == int((a != 0).sum())
+    out = jax.jit(convert_execute, static_argnums=1)(D, plan)
+    np.testing.assert_allclose(to_dense_np(out), a)
+
+
+def test_convert_accepts_plan_and_checks_target():
+    A = _mat(3)
+    plan = plan_switch(A, Format.DIA)
+    np.testing.assert_allclose(to_dense_np(convert(A, Format.DIA, plan=plan)),
+                               to_dense_np(A), rtol=1e-6, atol=1e-6)
+    with pytest.raises(ValueError):
+        convert(A, Format.ELL, plan=plan)
+
+
+def test_explicit_hints_short_circuit_analysis():
+    A = _mat(4)
+    p = plan_switch(A, Format.DIA, offsets=[-1, 0, 1])
+    assert p.dia_offsets == (-1, 0, 1)
+    # unsorted hints are sorted for the searchsorted-routed numeric phase
+    assert plan_switch(A, Format.DIA, offsets=[1, -1, 0]).dia_offsets == (-1, 0, 1)
+    p = plan_switch(A, Format.ELL, k=64)
+    assert p.ell_k == 64
+    p = plan_switch(A, Format.HYB, k=2)
+    assert p.ell_k == 2 and p.hyb_coo_capacity >= 1
+
+
+def test_hyb_plan_capacity_is_exact():
+    A = _mat(5, shape=(100, 80), density=0.1)
+    counts = np.bincount(np.asarray(A.row)[np.asarray(A.data) != 0],
+                         minlength=100)
+    k = 3
+    plan = plan_switch(A, Format.HYB, k=k)
+    assert plan.hyb_coo_capacity == max(1, int(np.maximum(counts - k, 0).sum()))
+    H = convert(A, Format.HYB, plan=plan)
+    np.testing.assert_allclose(to_dense_np(H), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ell_explicit_k_overflow_raises():
+    """Satellite fix: overflow used to be silently clipped/dropped."""
+    A = _mat(6, shape=(32, 32), density=0.3)
+    with pytest.raises(ValueError, match="overflow"):
+        coo_to_ell(A, k=2)
+    with pytest.raises(ValueError, match="overflow"):
+        convert(A, Format.ELL, k=2)
+    # HYB is the sanctioned home for overflow — same k must NOT raise
+    np.testing.assert_allclose(to_dense_np(convert(A, Format.HYB, k=2)),
+                               to_dense_np(A), rtol=1e-6, atol=1e-6)
+
+
+def test_ell_wide_explicit_k_still_works():
+    A = _mat(7, shape=(48, 64), density=0.05)
+    E = coo_to_ell(A, k=64)
+    assert E.k == 64
+    np.testing.assert_allclose(to_dense_np(E), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_dynamic_matrix_plan_then_activate():
+    A = _mat(8)
+    dm = DynamicMatrix(A)
+    plan = dm.plan(Format.ELL)
+    with jax.transfer_guard_device_to_host("disallow"):
+        switched = jax.jit(
+            lambda m: m.activate(Format.ELL, plan=plan), static_argnums=())(dm)
+        jax.block_until_ready(jax.tree_util.tree_leaves(switched))
+    assert switched.active == Format.ELL
+    np.testing.assert_allclose(to_dense_np(switched.concrete), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_switch_dynamic_build_with_plans():
+    A = _mat(9)
+    fmts = (Format.CSR, Format.ELL, Format.DIA)
+    plans = {f: plan_switch(A, f) for f in fmts}
+    sw = SwitchDynamicMatrix.build(A, candidates=fmts, active=Format.ELL,
+                                   plans=plans)
+    x = jnp.ones((A.shape[1],), jnp.float32)
+    np.testing.assert_allclose(np.asarray(sw.spmv(x)),
+                               to_dense_np(A) @ np.ones(A.shape[1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_policy_supplies_plan():
+    from repro.tuning import FormatPolicy
+    A = _mat(10)
+    plan = FormatPolicy("analytic").plan_for(A)
+    assert isinstance(plan, SwitchPlan)
+    out = convert_execute(A, plan)
+    assert Format(out.format) == Format(plan.target)
+    np.testing.assert_allclose(to_dense_np(out), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+    # pinned format + hint
+    plan = FormatPolicy("analytic").plan_for(A, fmt=Format.ELL, k=80)
+    assert plan.target == Format.ELL and plan.ell_k == 80
+
+
+def test_interleaved_dead_entries_do_not_drop_data():
+    """Slot ranks must count live entries only: explicit zeros interleaved
+    with data (e.g. the COO view of a partially-filled diagonal) used to
+    inflate within-row ranks and silently drop the trailing live entries."""
+    from repro.core import coo_from_arrays
+    A = coo_from_arrays([0, 0, 0, 0, 0], [0, 1, 2, 3, 4],
+                        [0.0, 0.0, 5.0, 6.0, 7.0], (2, 5))
+    D = to_dense_np(A)
+    assert D[0, 4] == 7.0
+    for fmt in (Format.ELL, Format.HYB):
+        np.testing.assert_allclose(to_dense_np(convert(A, fmt)), D,
+                                   err_msg=fmt.name)
+    # the DIA -> {ELL, HYB} switch is the real-world path that hits this
+    Ad = convert(_mat(12, shape=(64, 64), density=0.08), Format.DIA)
+    for fmt in (Format.ELL, Format.HYB):
+        np.testing.assert_allclose(to_dense_np(convert(Ad, fmt)),
+                                   to_dense_np(Ad), rtol=1e-6, atol=1e-6,
+                                   err_msg=fmt.name)
+
+
+def test_unsorted_offsets_hint_converts_correctly():
+    from repro.core import banded_coo
+    A = banded_coo((8, 8), [-1, 0, 1])
+    out = convert(A, Format.DIA, offsets=[1, -1, 0])
+    np.testing.assert_allclose(to_dense_np(out), to_dense_np(A))
+
+
+def test_build_rejects_mismatched_plan():
+    A = _mat(13)
+    with pytest.raises(ValueError, match="targets"):
+        SwitchDynamicMatrix.build(
+            A, candidates=(Format.CSR, Format.ELL),
+            plans={Format.CSR: plan_switch(A, Format.ELL)})
+
+
+def test_convert_accepts_legacy_bsr_triple():
+    A = _mat(14, shape=(300, 200))
+    sp = plan_switch(A, Format.BSR, block_size=100)
+    triple = (np.asarray(sp.bsr_indptr), np.asarray(sp.bsr_indices), None)
+    out = convert(A, Format.BSR, plan=triple, block_size=100)
+    np.testing.assert_allclose(to_dense_np(out), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_plan_matches_legacy_defaults():
+    """The planned symbolic quantities equal the old host-numpy analysis."""
+    A = _mat(11, shape=(120, 90), density=0.07)
+    r = np.asarray(A.row)
+    c = np.asarray(A.col)
+    live = np.asarray(A.data) != 0
+    assert plan_switch(A, Format.ELL).ell_k == int(
+        np.bincount(r[live], minlength=120).max())
+    assert plan_switch(A, Format.DIA).dia_offsets == tuple(
+        np.unique((c.astype(np.int64) - r)[live]).tolist())

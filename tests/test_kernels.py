@@ -5,9 +5,11 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import Format, banded_coo, convert, random_coo, to_dense_np
+from repro.core import (Format, banded_coo, coo_from_dense_np, convert,
+                        random_coo, to_dense_np)
 from repro.kernels import ops as kops
-from repro.kernels.ref import bsr_spmm_ref, dia_spmv_ref, ell_spmv_ref
+from repro.kernels.ref import (bsr_spmm_ref, csr_spmv_ref, dia_spmv_ref,
+                               ell_spmv_ref)
 
 RNG = np.random.default_rng(0)
 
@@ -66,6 +68,68 @@ def test_ell_kernel_sweep(shape, density, dtype):
 
 
 # ---------------------------------------------------------------------------
+# CSR SpMV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,density", [
+    ((64, 64), 0.1),         # single tile
+    ((200, 150), 0.08),      # rectangular, non-tile-aligned rows
+    ((513, 400), 0.05),      # non-multiple-of-tile rows AND cols
+    ((1024, 1024), 0.01),    # multi-tile
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_csr_kernel_sweep(shape, density, dtype):
+    A = convert(random_coo(13, shape, density=density, dtype=dtype), Format.CSR)
+    x = jnp.asarray(RNG.standard_normal(shape[1]), dtype=dtype)
+    y_k = kops.csr_spmv(A, x)
+    y_r = csr_spmv_ref(A.indptr, A.indices, A.data, x, shape[0])
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("tm,tk", [(128, 256), (256, 512), (512, 128)])
+def test_csr_kernel_tile_sizes(tm, tk):
+    A = convert(random_coo(14, (700, 700), density=0.03), Format.CSR)
+    x = jnp.asarray(RNG.standard_normal(700).astype(np.float32))
+    y_k = kops.csr_spmv(A, x, tm=tm, tk=tk)
+    np.testing.assert_allclose(np.asarray(y_k), to_dense_np(A) @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_csr_kernel_empty_rows_and_padding():
+    """Empty rows cost nothing (zero-width windows); capacity padding past
+    indptr[-1] is never read."""
+    D = np.zeros((300, 300), np.float32)
+    mask = RNG.random((150, 300)) < 0.05
+    D[150:, :] = np.where(mask, RNG.standard_normal((150, 300)), 0).astype(np.float32)
+    A = convert(coo_from_dense_np(D, capacity=D.astype(bool).sum() + 777),
+                Format.CSR)
+    x = jnp.asarray(RNG.standard_normal(300).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(kops.csr_spmv(A, x)),
+                               D @ np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+def test_csr_vmem_budget_fallback():
+    """nnz arrays + x too large for VMEM residency -> ref fallback."""
+    n = 2_000_000  # 8 MB f32 > budget
+    A = convert(banded_coo((256, n), [0, 1000]), Format.CSR)
+    x = jnp.ones((n,), jnp.float32)
+    y = kops.csr_spmv(A, x)
+    np.testing.assert_allclose(np.asarray(y), to_dense_np(A) @ np.ones(n),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hyb_pallas_routes_tail_through_csr_kernel():
+    A = random_coo(15, (200, 160), density=0.06)
+    H = convert(A, Format.HYB, k=2)  # force a populated COO tail
+    assert H.coo.capacity > 1
+    x = jnp.asarray(RNG.standard_normal(160).astype(np.float32))
+    y = kops.hyb_spmv(H, x)
+    np.testing.assert_allclose(np.asarray(y), to_dense_np(A) @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # BSR SpMM
 # ---------------------------------------------------------------------------
 
@@ -112,7 +176,7 @@ def test_bsr_spmv_path():
 # backend="pallas" dispatch through the core API
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("fmt", [Format.DIA, Format.ELL])
+@pytest.mark.parametrize("fmt", [Format.CSR, Format.DIA, Format.ELL, Format.HYB])
 def test_core_pallas_backend(fmt):
     from repro.core import spmv
     A = convert(banded_coo((256, 256), [-4, 0, 4]), fmt)
@@ -120,6 +184,24 @@ def test_core_pallas_backend(fmt):
     y_p = spmv(A, x, backend="pallas")
     y_r = spmv(A, x, backend="ref")
     np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r), rtol=1e-4, atol=1e-4)
+
+
+def test_force_interpret_env_override(monkeypatch):
+    """REPRO_FORCE_INTERPRET pins the interpret flag in both directions,
+    re-read per call — no TPU-detection heuristic, no module reload."""
+    monkeypatch.delenv("REPRO_FORCE_INTERPRET", raising=False)
+    assert kops.interpret_mode() == kops.INTERPRET
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    assert kops.interpret_mode() is True
+    # the forced-interpret path must execute end to end
+    A = convert(banded_coo((128, 128), [-1, 0, 1]), Format.CSR)
+    x = jnp.ones((128,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(kops.csr_spmv(A, x)),
+                               to_dense_np(A) @ np.ones(128), rtol=1e-4, atol=1e-4)
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "0")
+    assert kops.interpret_mode() is False
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "")  # unset-equivalent
+    assert kops.interpret_mode() == kops.INTERPRET
 
 
 def test_vmem_budget_fallback():
