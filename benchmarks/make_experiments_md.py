@@ -1,17 +1,21 @@
-"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results/dryrun.
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline + §Distributed tables.
 
 Usage: PYTHONPATH=src python -m benchmarks.make_experiments_md
-Writes the tables to results/generated_tables.md for inclusion.
+Reads results/dryrun (roofline) and BENCH_dist.json (the ``scaling`` suite
+of benchmarks/run.py); writes the tables to results/generated_tables.md
+for inclusion.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import re
 
 from benchmarks import roofline as rl
 
-OUT = os.path.join(os.path.dirname(__file__), "..", "results", "generated_tables.md")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT = os.path.join(ROOT, "results", "generated_tables.md")
 
 
 def dryrun_table(mesh: str) -> str:
@@ -35,6 +39,35 @@ def dryrun_table(mesh: str) -> str:
     return "\n".join(rows)
 
 
+def dist_table() -> str:
+    """Pivot BENCH_dist.json's scaling rows: metric x shard count."""
+    path = os.path.join(ROOT, "BENCH_dist.json")
+    try:
+        rows = json.load(open(path)).get("rows", [])
+    except (OSError, ValueError):
+        return "_no BENCH_dist.json — run `python -m benchmarks.run --only scaling`_"
+    cells = {}  # metric -> {P: (us, derived)}
+    for r in rows:
+        m = re.fullmatch(r"scaling_(.+)_p(\d+)", r["name"])
+        if not m:
+            continue
+        cells.setdefault(m.group(1), {})[int(m.group(2))] = (
+            r["us_per_call"], r.get("derived", ""))
+    if not cells:
+        return "_BENCH_dist.json holds no scaling rows_"
+    shards = sorted({p for v in cells.values() for p in v})
+    out = ["| metric (µs) | " + " | ".join(f"P={p}" for p in shards) + " |",
+           "|---|" + "---|" * len(shards)]
+    for metric in sorted(cells):
+        vals = []
+        for p in shards:
+            us, derived = cells[metric].get(p, (None, ""))
+            vals.append("-" if us is None else
+                        f"{us:.0f}" + (f" ({derived})" if derived else ""))
+        out.append(f"| {metric} | " + " | ".join(vals) + " |")
+    return "\n".join(out)
+
+
 def main():
     parts = ["## Generated tables (benchmarks/make_experiments_md.py)\n"]
     parts.append("### Dry-run, single pod (16x16 = 256 chips)\n")
@@ -43,6 +76,8 @@ def main():
     parts.append(dryrun_table("multipod"))
     parts.append("\n### Roofline (single pod, corrected costs)\n")
     parts.append(rl.table("pod"))
+    parts.append("\n### Distributed scaling (BENCH_dist.json, forced host devices)\n")
+    parts.append(dist_table())
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         f.write("\n".join(parts) + "\n")

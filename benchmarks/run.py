@@ -4,15 +4,17 @@ Prints ``name,us_per_call,derived`` CSV and persists the perf trajectory:
 
   bench_overhead   Fig. 3  dynamic-dispatch overhead vs concrete CSR
   bench_formats    Fig. 4  single-node format comparison + autotuner pick
-  bench_scaling    Fig. 5  multi-shard strong scaling (4 Morpheus versions)
+  bench_scaling    Fig. 5  multi-shard strong scaling: distributed build
+                           (cold/warm) + SpMV for the 4 Morpheus versions
   bench_convert    §III-B  conversion (format-switch) amortisation
   switch           —       host-sync vs device-resident switch overhead
   bench_kernels    —       Pallas kernels (interpret) vs pure-jnp reference
   roofline         —       dry-run roofline table (if results are present)
 
 SpMV-side suites (formats/kernels/overhead) are written to
-``BENCH_spmv.json`` and conversion-side suites (convert/switch) to
-``BENCH_convert.json`` in ``--json-dir`` (default: cwd). Re-runs with
+``BENCH_spmv.json``, conversion-side suites (convert/switch) to
+``BENCH_convert.json`` and the distributed scaling suite to
+``BENCH_dist.json`` in ``--json-dir`` (default: cwd). Re-runs with
 ``--only`` merge rows by name into the existing files instead of wiping
 them, so partial runs keep the trajectory intact.
 
@@ -26,6 +28,7 @@ import time
 
 SPMV_SUITES = ("overhead", "formats", "kernels")
 CONVERT_SUITES = ("convert", "switch")
+DIST_SUITES = ("scaling",)
 
 
 def _emit_json(path, rows, meta):
@@ -42,6 +45,9 @@ def _emit_json(path, rows, meta):
                               "derived": str(derived)}
     doc["meta"] = {**doc.get("meta", {}), **meta}
     doc["rows"] = sorted(by_name.values(), key=lambda r: r["name"])
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
     return path
@@ -105,7 +111,9 @@ def main(argv=None):
             sizes=((8, 8, 8), (16, 16, 16)) if args.quick else
             ((8, 8, 8), (16, 16, 16), (24, 24, 24))),
         "kernels": bench_kernels,
-        "scaling": lambda: bench_scaling.run((1, 2, 4) if args.quick else (1, 2, 4, 8)),
+        "scaling": lambda: bench_scaling.run(
+            (1, 2, 4, 8), grid=(8, 8, 16), iters=10) if args.quick else
+            bench_scaling.run((1, 2, 4, 8)),
     }
     results = {}
     print("name,us_per_call,derived")
@@ -124,12 +132,16 @@ def main(argv=None):
     meta = {"backend": jax.default_backend(), "quick": bool(args.quick)}
     spmv_rows = [r for s in SPMV_SUITES for r in results.get(s, ())]
     convert_rows = [r for s in CONVERT_SUITES for r in results.get(s, ())]
+    dist_rows = [r for s in DIST_SUITES for r in results.get(s, ())]
     if spmv_rows:
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_spmv.json"),
                                   spmv_rows, meta))
     if convert_rows:
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_convert.json"),
                                   convert_rows, meta))
+    if dist_rows:
+        print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_dist.json"),
+                                  dist_rows, meta))
 
     # roofline table pointer (if the dry-run has produced results)
     if not only or "roofline" in only:

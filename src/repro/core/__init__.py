@@ -9,7 +9,8 @@ Public API:
 """
 from repro.core.autotune import PatternStats, TuneReport, analytic_select, autotune, profile_select
 from repro.core.convert import (SwitchPlan, convert, convert_execute,
-                                plan_switch, to_coo)
+                                convert_execute_batch, plan_switch,
+                                plan_switch_batch, to_coo)
 from repro.core.dynamic import DEFAULT_CANDIDATES, DynamicMatrix, SwitchDynamicMatrix
 from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
                                 banded_coo, bytes_of, coo_from_arrays,
@@ -20,7 +21,8 @@ from repro.core.ops import (assign, axpy, dot, extract_diagonal, norm2,
 
 __all__ = [
     "Format", "COO", "CSR", "DIA", "ELL", "BSR", "Dense", "HYB",
-    "convert", "convert_execute", "plan_switch", "SwitchPlan", "to_coo",
+    "convert", "convert_execute", "convert_execute_batch", "plan_switch",
+    "plan_switch_batch", "SwitchPlan", "to_coo",
     "DynamicMatrix", "SwitchDynamicMatrix",
     "DEFAULT_CANDIDATES", "spmv", "spmm", "dot", "waxpby", "axpy", "norm2",
     "assign", "reduction", "extract_diagonal", "update_diagonal",

@@ -1,4 +1,4 @@
-"""JAX version-compat resolvers.
+"""JAX version-compat resolvers and tiny sharding helpers.
 
 The repo targets the modern `jax.shard_map` / varying-axes API but must run
 on JAX 0.4.x, where shard_map still lives in `jax.experimental.shard_map`
@@ -8,6 +8,17 @@ and `jax.lax.pcast` does not exist. Resolve once at import time; callers use
 from __future__ import annotations
 
 import jax
+from jax.sharding import PartitionSpec
+
+
+def leading_axis_spec(axis, ndim: int) -> PartitionSpec:
+    """``P(axis, None, ...)`` — shard the leading axis, replicate the rest.
+
+    The one spec every stacked shard container and batch tensor uses; shared
+    by ``repro.core.distributed`` and ``repro.launch.sharding`` so the
+    distributed layer and the model launcher agree on the convention.
+    """
+    return PartitionSpec(axis, *(None,) * (ndim - 1))
 
 
 def _resolve_shard_map():

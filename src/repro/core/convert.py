@@ -26,6 +26,7 @@ execute.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -40,6 +41,31 @@ from repro.core.ops import csr_row_ids
 # device-side ``unique`` sweeps (offsets are < n <= int32 max; block grids
 # are validated against int32 before use).
 _SENTINEL = np.iinfo(np.int32).max
+
+# Every device->host transfer the symbolic phase performs goes through
+# ``_planned_pull`` below: the pull is executed under an explicit
+# ``transfer_guard`` allowance (so builders can run with unplanned pulls
+# *disallowed*) and counted, which is how tests assert that batched builds
+# perform a constant number of host transfers independent of shard count.
+_PLANNED_PULLS = 0
+
+
+def planned_pull_count() -> int:
+    """Number of sanctioned symbolic-phase device->host pulls so far."""
+    return _PLANNED_PULLS
+
+
+def _planned_pull(x) -> np.ndarray:
+    """Pull a small plan artifact (scalar / offset list) to host.
+
+    This is the *only* sanctioned device->host transfer of the plan
+    pipeline; it is exempted from any active ``transfer_guard`` and counted
+    so callers can verify no O(shards) pulls sneak in.
+    """
+    global _PLANNED_PULLS
+    _PLANNED_PULLS += 1
+    with jax.transfer_guard_device_to_host("allow"):
+        return np.asarray(x)
 
 
 def _is_tracer(x) -> bool:
@@ -181,7 +207,7 @@ def _unique_small(values, sentinel=_SENTINEL) -> np.ndarray:
     The transfer is O(#unique) — an offset list or a block map — not
     O(nnz) like the pre-plan host symbolic phase.
     """
-    u = np.asarray(jnp.unique(values))
+    u = _planned_pull(jnp.unique(values))
     return u[u != sentinel]
 
 
@@ -200,7 +226,7 @@ def plan_switch(A, fmt: Format, *, k: Optional[int] = None,
     """
     fmt = Format(fmt)
     if isinstance(A, Dense):
-        need = max(1, int(jnp.count_nonzero(A.data)))
+        need = max(1, int(_planned_pull(jnp.count_nonzero(A.data))))
         if capacity is None:
             capacity = need
         elif int(capacity) < need:
@@ -217,9 +243,9 @@ def plan_switch(A, fmt: Format, *, k: Optional[int] = None,
 
     if fmt == Format.ELL:
         if k is None:
-            k = max(1, int(jnp.max(_live_row_counts(C, live))))
+            k = max(1, int(_planned_pull(jnp.max(_live_row_counts(C, live)))))
         elif check and not _is_tracer(C.data):
-            kmax = int(jnp.max(_live_row_counts(C, live)))
+            kmax = int(_planned_pull(jnp.max(_live_row_counts(C, live))))
             if kmax > int(k):
                 raise ValueError(
                     f"coo_to_ell: k={int(k)} but a row holds {kmax} live "
@@ -235,9 +261,11 @@ def plan_switch(A, fmt: Format, *, k: Optional[int] = None,
             offs = _unique_small(diffs)
             offsets = offs if offs.size else np.array([0])
         # the numeric phase routes entries with searchsorted, which needs
-        # ascending offsets; duplicates are kept (they are inert, and the
-        # distributed uniform-offsets builder pads with them deliberately)
-        offsets = tuple(int(o) for o in np.sort(np.asarray(offsets).ravel()))
+        # ascending *unique* offsets: a duplicated offset would leave its
+        # second slot permanently unreachable, and the historical distributed
+        # builder's duplicate-offset padding could alias a live diagonal —
+        # dedupe here so every plan is canonical.
+        offsets = tuple(int(o) for o in np.unique(np.asarray(offsets).ravel()))
         return SwitchPlan(fmt, dia_offsets=offsets, capacity=capacity)
 
     if fmt == Format.BSR:
@@ -275,14 +303,124 @@ def plan_switch(A, fmt: Format, *, k: Optional[int] = None,
 def _median_positive(counts, m: int) -> int:
     """Median of the positive row counts, computed on device (one scalar
     sync). Mirrors the historical ``np.median(counts[counts > 0])``."""
-    npos = int(jnp.sum(counts > 0))
+    npos = int(_planned_pull(jnp.sum(counts > 0)))
     if npos == 0:
         return 1
     s = jnp.sort(counts)
     nz = m - npos
     lo = min(nz + (npos - 1) // 2, m - 1)
     hi = min(nz + npos // 2, m - 1)
-    return max(1, int((s[lo] + s[hi]) // 2))
+    return max(1, int(_planned_pull(s[lo] + s[hi])) // 2)
+
+
+# ---------------------------------------------------------------------------
+# Batched symbolic/numeric phases (stacked shard containers)
+# ---------------------------------------------------------------------------
+
+
+def _batch_row_counts(C: COO) -> jax.Array:
+    """(P, M) live-entry row counts of a stacked COO batch, one device pass."""
+    m = C.shape[0]
+
+    def one(row, data):
+        return jax.ops.segment_sum((data != 0).astype(jnp.int32), row,
+                                   num_segments=m)
+
+    return jax.vmap(one)(C.row, C.data)
+
+
+def plan_switch_batch(A: COO, fmt: Format, *, k: Optional[int] = None,
+                      offsets: Optional[Sequence[int]] = None,
+                      block_size: int = 128,
+                      capacity: Optional[int] = None,
+                      check: bool = True) -> SwitchPlan:
+    """Shared symbolic phase over a *stacked* batch of same-shape COO parts.
+
+    ``A`` is a COO container whose arrays carry a leading batch (shard)
+    axis: ``row/col/data`` of shape ``(P, capacity)`` with ``shape`` the
+    per-part matrix shape — exactly what the distributed partitioner emits.
+    One device pass analyses every part at once and produces a single
+    :class:`SwitchPlan` valid for the whole batch (shared ELL width = max
+    over parts, DIA offsets = deduped union over parts, shared HYB split,
+    union BSR block map), so the numeric phase can ``vmap`` under one
+    static plan — see :func:`convert_execute_batch`. Host traffic is a
+    handful of :func:`_planned_pull` artifacts, independent of P.
+    """
+    fmt = Format(fmt)
+    if not isinstance(A, COO) or getattr(A.data, "ndim", 1) != 2:
+        raise TypeError("plan_switch_batch expects a stacked COO container "
+                        "with (P, capacity) arrays")
+    m, n = A.shape
+
+    if fmt in (Format.COO, Format.CSR, Format.DENSE):
+        return SwitchPlan(fmt, capacity=capacity)
+
+    live = A.data != 0
+
+    if fmt == Format.ELL:
+        if k is None:
+            k = max(1, int(_planned_pull(jnp.max(_batch_row_counts(A)))))
+        elif check and not _is_tracer(A.data):
+            kmax = int(_planned_pull(jnp.max(_batch_row_counts(A))))
+            if kmax > int(k):
+                raise ValueError(
+                    f"plan_switch_batch: k={int(k)} but a row holds {kmax} "
+                    f"live entries; the overflow would be silently dropped. "
+                    f"Pass k>={kmax}, or use Format.HYB which spills "
+                    f"overflow into its COO part.")
+        return SwitchPlan(fmt, ell_k=int(k), capacity=capacity)
+
+    if fmt == Format.DIA:
+        if offsets is None:
+            diffs = jnp.where(live, A.col.astype(jnp.int32) - A.row.astype(jnp.int32),
+                              _SENTINEL)
+            offs = _unique_small(diffs.ravel())  # deduped union over parts
+            offsets = offs if offs.size else np.array([0])
+        offsets = tuple(int(o) for o in np.unique(np.asarray(offsets).ravel()))
+        return SwitchPlan(fmt, dia_offsets=offsets, capacity=capacity)
+
+    if fmt == Format.HYB:
+        counts = _batch_row_counts(A)
+        if k is None:
+            k = _median_positive(counts.ravel(), int(counts.size))
+        k = max(1, int(k))
+        overflow = jnp.sum(jnp.maximum(counts - k, 0), axis=1)  # per part
+        coo_cap = max(1, int(_planned_pull(jnp.max(overflow))))
+        return SwitchPlan(fmt, ell_k=k, hyb_coo_capacity=coo_cap,
+                          capacity=capacity)
+
+    if fmt == Format.BSR:
+        bs = int(block_size)
+        if m % bs or n % bs:
+            raise ValueError(f"shape {A.shape} not a multiple of block size {bs}")
+        nbr, nbc = m // bs, n // bs
+        if nbr * nbc >= np.iinfo(np.int32).max:
+            raise ValueError("block grid too large for int32 block ids")
+        gid = jnp.where(live, (A.row // bs) * nbc + (A.col // bs), _SENTINEL)
+        blk = _unique_small(gid.ravel()).astype(np.int64)  # union over parts
+        if blk.size == 0:
+            blk = np.zeros(1, np.int64)
+        pbr, pbc = blk // nbc, blk % nbc
+        indptr = np.zeros(nbr + 1, np.int64)
+        np.add.at(indptr, pbr + 1, 1)
+        indptr = np.cumsum(indptr)
+        return SwitchPlan(fmt, block_size=bs,
+                          bsr_indptr=tuple(int(i) for i in indptr),
+                          bsr_indices=tuple(int(c) for c in pbc),
+                          capacity=capacity)
+
+    raise ValueError(f"unknown format {fmt}")
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def convert_execute_batch(A, plan: SwitchPlan):
+    """Batched numeric phase: ``vmap`` of :func:`convert_execute` over the
+    leading (shard) axis under one shared static plan. Jit-compiled once
+    per (shapes, plan), zero device->host transfers — the distributed
+    builder's conversion is one call of this per candidate format, never a
+    per-shard Python loop.
+    """
+    return jax.vmap(lambda part: convert_execute(part, plan))(A)
 
 
 # ---------------------------------------------------------------------------

@@ -10,9 +10,26 @@ The paper's MPI design, mapped to JAX SPMD:
     dynamic matrix (the paper's key distributed observation);
   * SpMV = local SpMV + remote SpMV over halo values obtained by
     ``ExchangeHalo`` — here a ``ppermute`` neighbour exchange (slab
-    partitions: stencil matrices) or an ``all_gather`` (general fallback);
+    partitions: stencil matrices) or an ``all_gather`` (general fallback),
+    issued *before* the local SpMV so the collective overlaps compute;
   * per-shard format selection ("Multi-Format") uses ``SwitchDynamicMatrix``:
     one SPMD program, ``lax.switch`` on a per-shard format id.
+
+Architecture (the PR-2 plan/execute split, applied end-to-end):
+
+  * ``plan_partition`` (symbolic) scans the global triplets once — counts,
+    halo reach — and emits a :class:`DistPlan` of static host metadata
+    (slab size, halo width/mode, per-shard capacities, and once computed,
+    the per-format :class:`SwitchPlan`\\ s).
+  * ``partition_execute`` (numeric) is jit-able with the plan static: one
+    stable ``argsort`` over the global triplets scatters every entry into
+    its shard-local slot of the stacked, uniform-capacity local/remote COO
+    containers. Zero device->host transfers.
+  * conversion/selection are batched: ``plan_switch_batch`` produces one
+    shared plan per candidate format, ``convert_execute_batch`` vmaps the
+    numeric phase over the shard axis, and ``FormatPolicy.select_batch``
+    featurises every shard in one device pass — build cost no longer has a
+    Python-loop factor of P.
 
 Containers are *stacked*: every array gains a leading P axis which is
 sharded over the mesh partition axes; inside ``shard_map`` each shard sees
@@ -21,20 +38,20 @@ its own slab (leading dim 1) and unstacks it.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core import compat
-from repro.core.convert import convert as _convert_fn
+from repro.core.compat import leading_axis_spec
+from repro.core.convert import (SwitchPlan, convert_execute_batch,
+                                plan_switch_batch)
 from repro.core import ops as _ops
-from repro.core.dynamic import DynamicMatrix, SwitchDynamicMatrix
-from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format,
-                                coo_from_arrays)
+from repro.core.dynamic import SwitchDynamicMatrix
+from repro.core.formats import COO, Format
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -54,17 +71,9 @@ def _unstack(part):
     return jax.tree.map(lambda a: a[0], part)
 
 
-def _pad_coo(A: COO, capacity: int) -> COO:
-    pad = capacity - A.capacity
-    if pad <= 0:
-        return A
-    z = lambda a: jnp.pad(a, (0, pad))
-    return COO(z(A.row), z(A.col), z(A.data), A.shape, A.nnz)
-
-
-def uniform_capacity(parts: Sequence[COO]) -> Sequence[COO]:
-    cap = max(p.capacity for p in parts)
-    return [_pad_coo(p, cap) for p in parts]
+def _part_spec(t, axis: AxisNames):
+    """Stacked-container PartitionSpec tree: leading shard axis on ``axis``."""
+    return jax.tree.map(lambda a: leading_axis_spec(axis, a.ndim), t)
 
 
 # ---------------------------------------------------------------------------
@@ -80,10 +89,14 @@ class DistSparseMatrix:
     SwitchDynamicMatrix for Multi-Format). ``halo_mode`` is ``"neighbor"``
     (remote columns renumbered into a [prev_tail | next_head] halo of width
     ``hw`` per side) or ``"gather"`` (remote columns are global ids).
+    ``remote_empty`` marks a statically block-diagonal partition: the
+    remote part carries no entries, so SpMV skips both the exchange and
+    the remote term entirely.
     """
 
     def __init__(self, local, remote, *, nshards: int, mp: int, shape,
-                 axis: AxisNames, halo_mode: str, hw: int):
+                 axis: AxisNames, halo_mode: str, hw: int,
+                 remote_empty: bool = False):
         self.local = local
         self.remote = remote
         self.nshards = nshards
@@ -92,22 +105,32 @@ class DistSparseMatrix:
         self.axis = axis
         self.halo_mode = halo_mode
         self.hw = hw
+        self.remote_empty = remote_empty
 
     def tree_flatten(self):
-        meta = (self.nshards, self.mp, self.shape, self.axis, self.halo_mode, self.hw)
+        meta = (self.nshards, self.mp, self.shape, self.axis, self.halo_mode,
+                self.hw, self.remote_empty)
         return (self.local, self.remote), meta
 
     @classmethod
     def tree_unflatten(cls, meta, children):
-        nshards, mp, shape, axis, halo_mode, hw = meta
+        nshards, mp, shape, axis, halo_mode, hw, remote_empty = meta
         return cls(children[0], children[1], nshards=nshards, mp=mp,
-                   shape=shape, axis=axis, halo_mode=halo_mode, hw=hw)
+                   shape=shape, axis=axis, halo_mode=halo_mode, hw=hw,
+                   remote_empty=remote_empty)
+
+    def _replace_parts(self, local, remote) -> "DistSparseMatrix":
+        return DistSparseMatrix(
+            local, remote, nshards=self.nshards, mp=self.mp, shape=self.shape,
+            axis=self.axis, halo_mode=self.halo_mode, hw=self.hw,
+            remote_empty=self.remote_empty)
 
     def __repr__(self):
         lf = type(self.local).__name__
         rf = type(self.remote).__name__
+        halo = "empty" if self.remote_empty else f"{self.halo_mode}:{self.hw}"
         return (f"DistSparseMatrix(shape={self.shape}, P={self.nshards}, "
-                f"local={lf}, remote={rf}, halo={self.halo_mode}:{self.hw})")
+                f"local={lf}, remote={rf}, halo={halo})")
 
 
 # ---------------------------------------------------------------------------
@@ -125,46 +148,287 @@ def _exchange_neighbor(x_blk, hw: int, axis: AxisNames, nshards: int):
 
 
 def _shard_spmv(local, remote, x_blk, hw: int, axis: AxisNames, nshards: int,
-                halo_mode: str, backend: str):
-    """Per-shard SpMV body: y = A_local x_local + A_remote x_halo."""
-    y = _ops.spmv(local, x_blk, backend=backend)
+                halo_mode: str, backend: str, remote_empty: bool):
+    """Per-shard SpMV body: y = A_local x_local + A_remote x_halo.
+
+    The halo collective is issued *before* the local SpMV: it has no data
+    dependency on it, so XLA's latency-hiding scheduler overlaps the
+    exchange with the local compute (the paper's communication/computation
+    overlap). A statically-empty remote part skips both entirely.
+    """
+    if remote_empty:
+        return _ops.spmv(local, x_blk, backend=backend)
     if halo_mode == "neighbor":
         halo = _exchange_neighbor(x_blk, hw, axis, nshards)
     elif halo_mode == "gather":
         halo = jax.lax.all_gather(x_blk, axis, tiled=True)
     else:
         raise ValueError(halo_mode)
+    y = _ops.spmv(local, x_blk, backend=backend)
     return y + _ops.spmv(remote, halo, backend=backend)
 
 
-def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "ref"):
-    """Global SpMV. ``x`` is the global vector sharded P(axis)."""
+def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "auto"):
+    """Global SpMV. ``x`` is the global vector sharded P(axis).
+
+    ``backend="auto"`` routes each shard's local/remote SpMV to the Pallas
+    CSR/DIA/ELL kernels when they compile natively, else to the jnp
+    reference path (see ``repro.core.ops.resolve_backend``).
+    """
     axis = A.axis
-    part_spec = lambda t: jax.tree.map(lambda a: P(axis, *(None,) * (a.ndim - 1)), t)
+    backend = _ops.resolve_backend(backend)
 
     def body(local_s, remote_s, x_blk):
         return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,
-                           A.hw, axis, A.nshards, A.halo_mode, backend)
+                           A.hw, axis, A.nshards, A.halo_mode, backend,
+                           A.remote_empty)
 
     fn = compat.shard_map(
         body, mesh=mesh,
-        in_specs=(part_spec(A.local), part_spec(A.remote), P(axis)),
-        out_specs=P(axis))
+        in_specs=(_part_spec(A.local, axis), _part_spec(A.remote, axis),
+                  leading_axis_spec(axis, 1)),
+        out_specs=leading_axis_spec(axis, 1))
     return fn(A.local, A.remote, x)
 
 
 def distribute_vector(x, mesh: Mesh, axis: AxisNames):
-    return jax.device_put(jnp.asarray(x), NamedSharding(mesh, P(axis)))
+    return jax.device_put(jnp.asarray(x),
+                          NamedSharding(mesh, leading_axis_spec(axis, 1)))
 
 
 # ---------------------------------------------------------------------------
-# Partitioner (host, setup phase — the paper's problem-setup analogue)
+# The partition plan (symbolic phase — static host metadata only)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Static metadata of a slab partition — the distributed symbolic phase.
+
+    Everything here is small host data (ints, strings, plan tuples):
+    hashable, so the numeric phases (``partition_execute``,
+    ``convert_execute_batch``) ride through ``jax.jit`` as static
+    arguments. ``local_plans``/``remote_plans`` memoise the per-candidate
+    :class:`SwitchPlan`\\ s once a multiformat build has computed them, so
+    a rebuild (e.g. after a numeric update with the same pattern) performs
+    zero symbolic device->host pulls.
+    """
+
+    nshards: int
+    mp: int                       # rows per slab
+    hw: int                       # halo width per side (0: remote empty)
+    halo_mode: str                # "neighbor" | "gather"
+    shape: Tuple[int, int]
+    local_cap: int                # shared local COO capacity across shards
+    remote_cap: int               # shared remote COO capacity across shards
+    remote_empty: bool = False
+    candidates: Optional[Tuple[Format, ...]] = None
+    local_plans: Optional[Tuple[SwitchPlan, ...]] = None
+    remote_plans: Optional[Tuple[SwitchPlan, ...]] = None
+    # live-pattern fingerprint: the memoised format plans above are valid
+    # only for triplets with the same live (val != 0) pattern; the builder
+    # drops them and re-plans when the fingerprint no longer matches.
+    pattern_sig: Optional[str] = None
+
+    @property
+    def remote_width(self) -> int:
+        if self.remote_empty:
+            return 1  # inert 1-column placeholder part
+        return 2 * self.hw if self.halo_mode == "neighbor" else self.shape[1]
+
+    @property
+    def local_shape(self) -> Tuple[int, int]:
+        return (self.mp, self.mp)
+
+    @property
+    def remote_shape(self) -> Tuple[int, int]:
+        return (self.mp, self.remote_width)
+
+
+def plan_partition(row, col, val, shape, nshards: int,
+                   halo_mode: str = "auto") -> DistPlan:
+    """Symbolic phase of the slab partitioner: one vectorised host scan.
+
+    Rows are divided into ``nshards`` equal slabs (M must divide evenly;
+    pad upstream with identity rows otherwise). The halo mode is chosen
+    automatically: ``neighbor`` when every remote column lies within one
+    slab-width of the owning slab (stencil matrices), else ``gather``; a
+    block-diagonal matrix (no remote entries at all) gets ``hw=0`` and a
+    statically-empty remote part — no exchange is ever issued for it.
+    """
+    m, n = shape
+    if nshards <= 0 or m % nshards or m != n:
+        raise ValueError(
+            f"square matrix with M % P == 0 required, got {shape} / {nshards}")
+    mp = m // nshards
+    row = np.asarray(row, np.int64)
+    col = np.asarray(col, np.int64)
+
+    shard = row // mp
+    local_mask = (col // mp) == shard
+    remote_mask = ~local_mask
+    remote_empty = not bool(remote_mask.any())
+    # maximum reach of remote columns beyond slab boundaries
+    reach_lo = np.where(remote_mask, shard * mp - col, 0).max(initial=0)
+    reach_hi = np.where(remote_mask, col - ((shard + 1) * mp - 1), 0).max(initial=0)
+    reach = int(max(reach_lo, reach_hi))
+    if halo_mode == "auto":
+        halo_mode = "neighbor" if reach <= mp else "gather"
+    if halo_mode == "neighbor":
+        if reach > mp:
+            raise ValueError("neighbor halo violated; use halo_mode='gather'")
+        hw = 0 if remote_empty else max(1, reach)
+    elif halo_mode == "gather":
+        hw = 0 if remote_empty else mp
+    else:
+        raise ValueError(halo_mode)
+
+    lcounts = np.bincount(shard[local_mask], minlength=nshards)
+    rcounts = np.bincount(shard[remote_mask], minlength=nshards)
+    return DistPlan(nshards=nshards, mp=mp, hw=hw, halo_mode=halo_mode,
+                    shape=(m, n), local_cap=max(1, int(lcounts.max())),
+                    remote_cap=max(1, int(rcounts.max())),
+                    remote_empty=remote_empty)
+
+
+def partition_execute(row, col, val, plan: DistPlan,
+                      dtype=jnp.float32) -> Tuple[COO, COO]:
+    """Numeric phase of the slab partitioner (jit-able, ``plan`` static).
+
+    One stable ``argsort`` over the global triplets orders entries by
+    (shard, local/remote); a rank-within-group scatter then drops every
+    entry into its slot of the stacked uniform-capacity containers. Local
+    columns are renumbered shard-relative, remote columns halo-relative
+    (neighbor mode) or kept global (gather mode). Zero device->host
+    transfers.
+    """
+    nshards, mp, hw = plan.nshards, plan.mp, plan.hw
+    row = jnp.asarray(row).astype(jnp.int32)
+    col = jnp.asarray(col).astype(jnp.int32)
+    val = jnp.asarray(val).astype(dtype)
+    nent = row.shape[0]
+
+    shard = row // mp
+    is_remote = (col // mp) != shard
+    key = shard * 2 + is_remote.astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    k_s, r_s, c_s, v_s = key[order], row[order], col[order], val[order]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jnp.bincount(key, length=2 * nshards)).astype(jnp.int32)])
+    rank = jnp.arange(nent, dtype=jnp.int32) - starts[k_s]
+    p = k_s // 2
+    rem = (k_s % 2) == 1
+
+    lrow = r_s - p * mp
+    lcol = c_s - p * mp
+    if plan.halo_mode == "neighbor" and not plan.remote_empty:
+        below = c_s < p * mp
+        rcol = jnp.where(below, c_s - (p * mp - hw), hw + (c_s - (p + 1) * mp))
+    else:
+        rcol = c_s
+
+    def scatter(select, cap, cols, vals):
+        # in-capacity entries land at p*cap + rank; everything else (the
+        # other part's entries, or overflow under a stale plan) goes to a
+        # dropped guard slot past the end.
+        ok = select & (rank < cap)
+        dest = jnp.where(ok, p * cap + jnp.minimum(rank, cap - 1),
+                         nshards * cap)
+        out = []
+        for x in (lrow, cols, vals):
+            buf = jnp.zeros((nshards * cap + 1,), x.dtype).at[dest].set(
+                jnp.where(ok, x, jnp.zeros((), x.dtype)))
+            out.append(buf[:nshards * cap].reshape(nshards, cap))
+        return out
+
+    lr, lc, lv = scatter(~rem, plan.local_cap, lcol, v_s)
+    rr, rc, rv = scatter(rem, plan.remote_cap, rcol, v_s)
+    local = COO(lr, lc, lv, plan.local_shape, plan.local_cap)
+    remote = COO(rr, rc, rv, plan.remote_shape, plan.remote_cap)
+    return local, remote
+
+
+# One process-wide trace cache: rebuilds with the same plan/shapes are pure
+# dispatch (jit wrappers created per call would retrace every build).
+partition_execute_jit = jax.jit(partition_execute,
+                                static_argnames=("plan", "dtype"))
+
+
+def plan_dist_formats(local: COO, remote: COO, plan: DistPlan,
+                      candidates: Sequence[Format]) -> DistPlan:
+    """Attach the per-candidate :class:`SwitchPlan`\\ s to a DistPlan.
+
+    One :func:`plan_switch_batch` pass per candidate per part; a plan that
+    already carries matching format plans is returned unchanged (rebuilds
+    perform no symbolic pulls at all).
+    """
+    candidates = tuple(Format(c) for c in candidates)
+    if plan.candidates == candidates and plan.local_plans is not None:
+        return plan
+    lplans = tuple(plan_switch_batch(local, f) for f in candidates)
+    rplans = tuple(plan_switch_batch(remote, f) for f in candidates)
+    return dataclasses.replace(plan, candidates=candidates,
+                               local_plans=lplans, remote_plans=rplans)
+
+
+def _pattern_sig(row, col, val) -> str:
+    """Fingerprint of the *live* sparsity pattern (host, one O(nnz) pass)."""
+    import hashlib
+
+    live = np.asarray(val) != 0
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(np.asarray(row, np.int64)[live]).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(col, np.int64)[live]).tobytes())
+    return h.hexdigest()
+
+
+def _check_plan_fits(row, col, plan: DistPlan) -> None:
+    """A reused plan must still fit the triplets.
+
+    ``partition_execute``'s guard-slot scatter silently drops entries whose
+    rank exceeds the planned capacity, and a halo reach beyond the planned
+    width would store out-of-range remote columns — both would corrupt the
+    matrix with no error. One vectorised host scan (same cost class as
+    ``plan_partition``) turns a stale plan into a loud failure instead.
+    """
+    row = np.asarray(row, np.int64)
+    col = np.asarray(col, np.int64)
+    mp = plan.mp
+    shard = row // mp
+    local_mask = (col // mp) == shard
+    remote_mask = ~local_mask
+    lmax = int(np.bincount(shard[local_mask], minlength=plan.nshards).max(initial=0))
+    rmax = int(np.bincount(shard[remote_mask], minlength=plan.nshards).max(initial=0))
+    if lmax > plan.local_cap or rmax > plan.remote_cap:
+        raise ValueError(
+            f"stale DistPlan: capacities (local {plan.local_cap}, remote "
+            f"{plan.remote_cap}) too small for these triplets (need "
+            f"{lmax}/{rmax}); re-plan with plan_partition")
+    if rmax and plan.remote_empty:
+        raise ValueError("stale DistPlan: marked remote-empty but the "
+                         "triplets have remote entries; re-plan")
+    if plan.halo_mode == "neighbor" and not plan.remote_empty:
+        reach_lo = np.where(remote_mask, shard * mp - col, 0).max(initial=0)
+        reach_hi = np.where(remote_mask, col - ((shard + 1) * mp - 1), 0).max(initial=0)
+        if int(max(reach_lo, reach_hi)) > plan.hw:
+            raise ValueError(
+                f"stale DistPlan: halo width {plan.hw} smaller than the "
+                f"triplets' reach {int(max(reach_lo, reach_hi))}; re-plan")
+
+
+# ---------------------------------------------------------------------------
+# Legacy host partitioner (reference implementation, kept for tooling)
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class PartitionedCOO:
-    """Host-side per-shard COO triplets (intermediate symbolic product)."""
+    """Host-side per-shard COO triplets (reference symbolic product).
+
+    The batched device path (``plan_partition`` + ``partition_execute``)
+    supersedes this for building; it remains the easy-to-inspect oracle.
+    """
 
     local: list  # [(row, col, val)] per shard, columns shard-local
     remote: list  # [(row, col, val)] per shard, columns halo-renumbered
@@ -172,95 +436,45 @@ class PartitionedCOO:
     hw: int
     halo_mode: str
     shape: Tuple[int, int]
+    remote_empty: bool = False
 
 
 def partition_coo(row, col, val, shape, nshards: int,
                   halo_mode: str = "auto") -> PartitionedCOO:
-    """Split global COO triplets into per-shard local/remote parts.
+    """Split global COO triplets into per-shard local/remote host triplets.
 
-    Rows are divided into ``nshards`` equal slabs (M must divide evenly; pad
-    upstream with identity rows otherwise). The halo mode is chosen
-    automatically: ``neighbor`` when every remote column lies within one
-    slab-width of the owning slab (stencil matrices), else ``gather``.
+    Reference (per-shard loop) counterpart of :func:`partition_execute`;
+    halo-mode selection and capacities come from :func:`plan_partition`.
     """
-    m, n = shape
-    if m % nshards or m != n:
-        raise ValueError(f"square matrix with M % P == 0 required, got {shape} / {nshards}")
-    mp = m // nshards
+    plan = plan_partition(row, col, val, shape, nshards, halo_mode=halo_mode)
+    mp, hw = plan.mp, plan.hw
     row = np.asarray(row, np.int64)
     col = np.asarray(col, np.int64)
     val = np.asarray(val)
-
     shard = row // mp
     local_mask = (col // mp) == shard
-    # maximum reach of remote columns beyond slab boundaries
-    reach_lo = np.where(~local_mask, shard * mp - col, 0).max(initial=0)
-    reach_hi = np.where(~local_mask, col - ((shard + 1) * mp - 1), 0).max(initial=0)
-    reach = int(max(reach_lo, reach_hi))
-    if halo_mode == "auto":
-        halo_mode = "neighbor" if 0 < reach <= mp else ("neighbor" if reach == 0 else "gather")
-    hw = max(1, int(reach)) if halo_mode == "neighbor" else mp
 
     locals_, remotes = [], []
     for p in range(nshards):
         in_shard = shard == p
         lm = in_shard & local_mask
         rm = in_shard & ~local_mask
-        lr, lc, lv = row[lm] - p * mp, col[lm] - p * mp, val[lm]
+        locals_.append((row[lm] - p * mp, col[lm] - p * mp, val[lm]))
         rr = row[rm] - p * mp
-        if halo_mode == "neighbor":
-            gc = col[rm]
+        gc = col[rm]
+        if plan.halo_mode == "neighbor" and not plan.remote_empty:
             start, end = p * mp, (p + 1) * mp
-            below = gc < start
-            rc = np.where(below, gc - (start - hw), hw + (gc - end))
-            if rm.any() and ((rc < 0).any() or (rc >= 2 * hw).any()):
-                raise ValueError("neighbor halo violated; use halo_mode='gather'")
+            rc = np.where(gc < start, gc - (start - hw), hw + (gc - end))
         else:
-            rc = col[rm]
-        locals_.append((lr, lc, lv))
+            rc = gc
         remotes.append((rr, rc, val[rm]))
-    return PartitionedCOO(locals_, remotes, mp, hw, halo_mode, shape)
+    return PartitionedCOO(locals_, remotes, mp, hw, plan.halo_mode, plan.shape,
+                          remote_empty=plan.remote_empty)
 
 
-def _shard_coos(parts, shape, dtype):
-    """Uniform-capacity COO containers from per-shard triplets.
-
-    Static metadata (capacity AND logical nnz) must match across shards so
-    the containers stack into one pytree; nnz is set to the shared capacity
-    (zero-padding keeps the extra entries inert).
-    """
-    cap = max(1, max(len(t[0]) for t in parts))
-    coos = [coo_from_arrays(r, c, v, shape, capacity=cap, dtype=dtype)
-            for (r, c, v) in parts]
-    return [dataclasses.replace(c, nnz=cap) for c in coos]
-
-
-def _convert_uniform(coos, fmt: Format, **kw):
-    """Convert shard COOs to ``fmt`` with *uniform* static metadata so the
-    results can be stacked (shared ELL width / DIA offset count / etc.)."""
-    if fmt == Format.ELL:
-        k = kw.get("k")
-        if k is None:
-            k = 1
-            for c in coos:
-                r = np.asarray(c.row)[np.asarray(c.data) != 0]
-                if r.size:
-                    k = max(k, int(np.bincount(r, minlength=c.shape[0]).max()))
-        return [_convert_fn(c, fmt, k=k) for c in coos]
-    if fmt == Format.DIA:
-        # per-shard offsets padded to a common count (offset 0, zero data)
-        offs = []
-        for c in coos:
-            live = np.asarray(c.data) != 0
-            o = np.unique((np.asarray(c.col, np.int64) - np.asarray(c.row, np.int64))[live])
-            offs.append(o if o.size else np.zeros(1, np.int64))
-        nd = max(o.size for o in offs)
-        out = []
-        for c, o in zip(coos, offs):
-            o = np.concatenate([o, np.full(nd - o.size, o[-1] if o.size else 0)])
-            out.append(_convert_fn(c, fmt, offsets=np.sort(o)))
-        return out
-    return [_convert_fn(c, fmt, **kw) for c in coos]
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
 
 
 def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
@@ -270,12 +484,24 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
                       candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
                       tune: str = "calibrated",
                       halo_mode: str = "auto",
-                      dtype=jnp.float32) -> DistSparseMatrix:
+                      dtype=jnp.float32,
+                      plan: Optional[DistPlan] = None,
+                      check_plan: bool = True) -> DistSparseMatrix:
     """Build a distributed dynamic matrix (the paper's three versions).
 
     mode='uniform'      local/remote formats fixed (Morpheus & Ghost configs)
     mode='multiformat'  per-shard formats chosen by the auto-tuner, dispatched
                         via SwitchDynamicMatrix (paper's Multi-Format).
+
+    The build is the plan/execute pipeline end-to-end: one host scan (or a
+    caller-supplied :class:`DistPlan`, e.g. ``repro.core.hpcg.slab_plan``'s
+    analytic one) plans the partition; one jitted ``partition_execute``
+    scatters the triplets into stacked shard containers on device; one
+    shared ``plan_switch_batch`` plan + one vmapped ``convert_execute_batch``
+    per candidate format builds the variants; and in multiformat mode
+    ``FormatPolicy.select_batch`` picks every shard's format from a single
+    batched featurisation pass. No per-shard Python loops anywhere on the
+    cached/ml/analytic paths.
 
     ``tune`` names the per-shard selection strategy: a
     ``repro.tuning.FormatPolicy`` mode ("ml" | "cached" | "analytic" |
@@ -288,50 +514,82 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
     nshards = int(np.prod([sizes[a] for a in names]))
     axis = names if len(names) > 1 else names[0]
 
-    pc = partition_coo(row, col, val, shape, nshards, halo_mode=halo_mode)
-    lshape = (pc.mp, pc.mp)
-    rshape = (pc.mp, 2 * pc.hw if pc.halo_mode == "neighbor" else shape[1])
-    lcoos = _shard_coos(pc.local, lshape, dtype)
-    rcoos = _shard_coos(pc.remote, rshape, dtype)
+    if plan is None:
+        plan = plan_partition(row, col, val, shape, nshards,
+                              halo_mode=halo_mode)
+    else:
+        if plan.nshards != nshards or plan.shape != tuple(shape):
+            raise ValueError(f"plan is for P={plan.nshards} shape={plan.shape}, "
+                             f"build asked for P={nshards} shape={tuple(shape)}")
+        if check_plan:
+            # one vectorised host scan: a stale plan must fail loudly (or,
+            # for the memoised format plans, fall back to re-planning)
+            # rather than silently drop entries. check_plan=False skips it
+            # for trusted analytic plans (e.g. hpcg.slab_plan) so the
+            # triplets are touched only by the device scatter.
+            _check_plan_fits(row, col, plan)
+            if (plan.local_plans is not None
+                    and plan.pattern_sig != _pattern_sig(row, col, val)):
+                plan = dataclasses.replace(plan, candidates=None,
+                                           local_plans=None,
+                                           remote_plans=None,
+                                           pattern_sig=None)
+    # strip the format plans / fingerprint for the partition jit key: a plan
+    # enriched by plan_dist_formats must hit the same partition_execute trace
+    part_plan = dataclasses.replace(plan, candidates=None, local_plans=None,
+                                    remote_plans=None, pattern_sig=None)
+    lcoos, rcoos = partition_execute_jit(np.asarray(row), np.asarray(col),
+                                         np.asarray(val), plan=part_plan,
+                                         dtype=dtype)
 
     if mode == "uniform":
-        local = stack_parts(_convert_uniform(lcoos, Format(local_format)))
-        remote = stack_parts(_convert_uniform(rcoos, Format(remote_format)))
+        local = convert_execute_batch(
+            lcoos, plan_switch_batch(lcoos, Format(local_format)))
+        remote = convert_execute_batch(
+            rcoos, plan_switch_batch(rcoos, Format(remote_format)))
     elif mode == "multiformat":
         # per-shard selection, paper §V-E, via the unified FormatPolicy
         from repro.tuning.policy import FormatPolicy
 
+        candidates = tuple(Format(c) for c in candidates)
         if isinstance(tune, FormatPolicy):
             policy = tune
-            if not set(policy.candidates) <= set(Format(c) for c in candidates):
+            if not set(policy.candidates) <= set(candidates):
                 raise ValueError(
                     f"tune policy candidates {[f.name for f in policy.candidates]} "
                     f"must be a subset of the build candidates "
-                    f"{[Format(c).name for c in candidates]}: every pick has "
+                    f"{[f.name for f in candidates]}: every pick has "
                     f"to map onto a resident union variant")
         else:
             pmode = "profile" if tune == "calibrated" else tune
-            policy = FormatPolicy(pmode, candidates=tuple(candidates),
+            policy = FormatPolicy(pmode, candidates=candidates,
                                   profile_iters=3)
 
-        def select(coos):
-            ids = []
-            for c in coos:
-                rep = policy.select(c, x=jnp.ones((c.shape[1],), dtype))
-                ids.append(list(candidates).index(rep.best))
-            return np.asarray(ids, np.int32)
-
-        lids, rids = select(lcoos), select(rcoos)
-        lvars = [stack_parts(_convert_uniform(lcoos, f)) for f in candidates]
-        rvars = [stack_parts(_convert_uniform(rcoos, f)) for f in candidates]
-        local = SwitchDynamicMatrix(lvars, jnp.asarray(lids))
-        remote = SwitchDynamicMatrix(rvars, jnp.asarray(rids))
+        plan = plan_dist_formats(lcoos, rcoos, plan, candidates)
+        if plan.pattern_sig is None:
+            # stamp the live pattern the memoised format plans are valid for
+            plan = dataclasses.replace(
+                plan, pattern_sig=_pattern_sig(row, col, val))
+        # policy-candidate indices -> build-candidate (variant) indices
+        remap = np.asarray([candidates.index(f) for f in policy.candidates],
+                           np.int32)
+        lids, rids = remap[policy.select_batch(lcoos)], remap[policy.select_batch(rcoos)]
+        local = SwitchDynamicMatrix.build_batched(
+            lcoos, candidates, plans=plan.local_plans, active_ids=lids)
+        remote = SwitchDynamicMatrix.build_batched(
+            rcoos, candidates, plans=plan.remote_plans, active_ids=rids)
     else:
         raise ValueError(mode)
 
-    A = DistSparseMatrix(local, remote, nshards=nshards, mp=pc.mp, shape=shape,
-                         axis=axis, halo_mode=pc.halo_mode, hw=pc.hw)
-    return _shard_containers(A, mesh)
+    A = DistSparseMatrix(local, remote, nshards=nshards, mp=plan.mp,
+                         shape=shape, axis=axis, halo_mode=plan.halo_mode,
+                         hw=plan.hw, remote_empty=plan.remote_empty)
+    A = _shard_containers(A, mesh)
+    # Build artifact (not pytree state): pass back via build(plan=...) and a
+    # rebuild performs zero symbolic pulls — partition caps and per-format
+    # SwitchPlans are all memoised.
+    A.plan = plan
+    return A
 
 
 def _shard_containers(A: DistSparseMatrix, mesh: Mesh) -> DistSparseMatrix:
@@ -339,12 +597,15 @@ def _shard_containers(A: DistSparseMatrix, mesh: Mesh) -> DistSparseMatrix:
     axis = A.axis
 
     def put(t):
-        return jax.tree.map(
-            lambda a: jax.device_put(a, NamedSharding(mesh, P(axis, *(None,) * (a.ndim - 1)))), t)
+        # a planned *placement*, not a symbolic pull: resharding a committed
+        # single-device array across the mesh may stage through host on CPU
+        # backends, which must not trip a build-time transfer guard.
+        with jax.transfer_guard("allow"):
+            return jax.tree.map(
+                lambda a: jax.device_put(
+                    a, NamedSharding(mesh, leading_axis_spec(axis, a.ndim))), t)
 
-    return DistSparseMatrix(put(A.local), put(A.remote), nshards=A.nshards,
-                            mp=A.mp, shape=A.shape, axis=axis,
-                            halo_mode=A.halo_mode, hw=A.hw)
+    return A._replace_parts(put(A.local), put(A.remote))
 
 
 def activate_dist(A: DistSparseMatrix, part: str, fmt_or_ids) -> DistSparseMatrix:
@@ -352,13 +613,16 @@ def activate_dist(A: DistSparseMatrix, part: str, fmt_or_ids) -> DistSparseMatri
     tgt = getattr(A, part)
     if isinstance(tgt, SwitchDynamicMatrix):
         if isinstance(fmt_or_ids, Format):
-            new = tgt.activate(fmt_or_ids)
+            idx = list(tgt.candidates).index(Format(fmt_or_ids))
+            ids = jnp.full((A.nshards,), idx, jnp.int32)
         else:
-            new = tgt.activate_id(jnp.asarray(fmt_or_ids, jnp.int32))
+            # scalar ids broadcast to the per-shard vector the stacked
+            # union's shard axis expects
+            ids = jnp.broadcast_to(jnp.asarray(fmt_or_ids, jnp.int32),
+                                   (A.nshards,))
+        new = tgt.activate_id(ids)
     else:
         raise TypeError("uniform-mode parts switch via build (conversion); "
                         "use mode='multiformat' for runtime switching")
-    kw = dict(nshards=A.nshards, mp=A.mp, shape=A.shape, axis=A.axis,
-              halo_mode=A.halo_mode, hw=A.hw)
-    return (DistSparseMatrix(new, A.remote, **kw) if part == "local"
-            else DistSparseMatrix(A.local, new, **kw))
+    return (A._replace_parts(new, A.remote) if part == "local"
+            else A._replace_parts(A.local, new))

@@ -39,6 +39,21 @@ def csr_row_ids(indptr, capacity: int, m: int):
     return jnp.clip(rows, 0, m - 1)
 
 
+def resolve_backend(backend: str) -> str:
+    """Resolve the ``"auto"`` backend name to a concrete one.
+
+    ``auto`` routes to the Pallas kernels whenever they would actually
+    compile (TPU, or ``REPRO_FORCE_INTERPRET=0``) and to the pure-jnp
+    reference path otherwise — interpret-mode kernel bodies execute in
+    Python and would be a pessimisation, not a fast path. Concrete names
+    pass through unchanged.
+    """
+    if backend != "auto":
+        return backend
+    from repro.kernels import ops as kops  # lazy: keep core import-light
+    return kops.auto_backend()
+
+
 def _spmv_coo(A: COO, x):
     contrib = A.data * jnp.take(x, A.col, mode="clip")
     return jax.ops.segment_sum(contrib, A.row, num_segments=A.shape[0])
@@ -110,7 +125,10 @@ _SPMV = {COO: _spmv_coo, CSR: _spmv_csr, DIA: _spmv_dia, ELL: _spmv_ell,
 
 def spmv(A, x, backend: str = "ref"):
     """y = A @ x. ``backend='ref'`` pure-jnp; ``'pallas'`` TPU kernels where
-    available (CSR/DIA/ELL/BSR/HYB), falling back to ref otherwise."""
+    available (CSR/DIA/ELL/BSR/HYB), falling back to ref otherwise;
+    ``'auto'`` picks pallas exactly when the kernels compile (see
+    :func:`resolve_backend`)."""
+    backend = resolve_backend(backend)
     if backend == "pallas":
         from repro.kernels import ops as kops  # lazy: keep core import-light
         fn = kops.SPMV_PALLAS.get(type(A))
@@ -179,7 +197,8 @@ _SPMM = {COO: _spmm_coo, CSR: _spmm_csr, DIA: _spmm_dia, ELL: _spmm_ell,
 
 
 def spmm(A, B, backend: str = "ref"):
-    """Y = A @ B with dense B of shape (N, K)."""
+    """Y = A @ B with dense B of shape (N, K). ``backend`` as in spmv."""
+    backend = resolve_backend(backend)
     if backend == "pallas":
         from repro.kernels import ops as kops
         fn = kops.SPMM_PALLAS.get(type(A))

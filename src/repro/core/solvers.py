@@ -24,6 +24,24 @@ class CGResult(NamedTuple):
     resnorm: jax.Array  # final ||r||_2
 
 
+def operator(A, mesh=None, backend: str = "auto") -> Callable:
+    """``apply_A`` closure for the solvers, over any matrix flavour.
+
+    Accepts a concrete container, a (Switch)DynamicMatrix, or a
+    ``DistSparseMatrix`` (then ``mesh`` is required and the closure is the
+    overlapped distributed SpMV). ``backend="auto"`` routes every shard's
+    SpMV to the Pallas kernels when they compile natively, so the
+    distributed CG of the HPCG example is kernel-routed by default.
+    """
+    from repro.core.distributed import DistSparseMatrix, dist_spmv
+
+    if isinstance(A, DistSparseMatrix):
+        if mesh is None:
+            raise ValueError("operator(DistSparseMatrix) requires mesh=")
+        return lambda v: dist_spmv(A, v, mesh, backend=backend)
+    return lambda v: _ops.spmv(A, v, backend=backend)
+
+
 def cg(apply_A: Callable, b: jax.Array, x0: Optional[jax.Array] = None,
        tol: float = 1e-8, maxiter: int = 100) -> CGResult:
     """Unpreconditioned conjugate gradients (HPCG's optimized-phase solve).

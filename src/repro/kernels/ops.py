@@ -46,6 +46,13 @@ def interpret_mode() -> bool:
     return INTERPRET if env is None else env
 
 
+def auto_backend() -> str:
+    """Backend the ``"auto"`` spmv/spmm routing resolves to right now:
+    ``"pallas"`` when the kernels compile natively (TPU, or the interpret
+    override is forced off), ``"ref"`` when they would run interpreted."""
+    return "ref" if interpret_mode() else "pallas"
+
+
 # VMEM residency budget for the x vector (bytes); beyond this the wrappers
 # fall back to the reference path (v5e has ~16 MiB VMEM per core).
 X_VMEM_BUDGET = 6 * 1024 * 1024

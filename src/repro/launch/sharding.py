@@ -18,6 +18,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import leading_axis_spec
 from repro.models.spec import P as SpecP, is_spec
 
 # logical axis -> mesh axis (axis tuples allowed), per step kind
@@ -100,7 +101,7 @@ def batch_pspec(mesh: Mesh, batch_specs: dict) -> dict:
     def one(s):
         b = s.shape[0]
         lead = dp if (dp is not None and b % dp_size == 0) else None
-        return P(lead, *(None,) * (len(s.shape) - 1))
+        return leading_axis_spec(lead, len(s.shape))
 
     return jax.tree.map(one, batch_specs,
                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
@@ -159,4 +160,4 @@ def with_dp_constraint(x, mesh: Mesh):
     """Activation constraint: batch dim over DP axes."""
     dp = _dp(mesh)
     return jax.lax.with_sharding_constraint(
-        x, NamedSharding(mesh, P(dp, *(None,) * (x.ndim - 1))))
+        x, NamedSharding(mesh, leading_axis_spec(dp, x.ndim)))

@@ -7,20 +7,27 @@ Two granularities:
 * ``PatternFeatures`` — the rich feature vector consumed by the ML
   classifier (arXiv:2303.05098 trains exactly this kind of model): row-nnz
   distribution moments, diagonal fill, bandwidth, block density, ELLPACK
-  efficiency. All features are computed on host from the COO pattern in one
-  pass; scale-dependent quantities are logged or normalised so the model
-  generalises across matrix sizes.
+  efficiency. ``from_coo`` computes them on host from one matrix's COO
+  pattern; ``batch_features`` computes them for a whole *stacked* batch of
+  shard parts in a single vmapped device pass with one small (P, stats)
+  host pull — the distributed builder's per-shard selection never loops
+  index arrays through host.
 
 Feature extraction is setup-phase work (like conversion's symbolic phase):
-it pulls the index arrays to host once, costs O(nnz), and never runs inside
-a jitted computation.
+it costs O(nnz), transfers only compacted statistics, and never runs inside
+a jitted solver step.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+from typing import List
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.convert import _planned_pull
 from repro.core.formats import COO
 
 # Order matters: this is the layout of ``PatternFeatures.vector()`` and the
@@ -147,3 +154,88 @@ class PatternFeatures:
         return PatternStats(self.m, self.n, max(self.nnz, 1),
                             max(1, self.row_nnz_max), max(1, self.ndiag),
                             self.itemsize)
+
+
+# ---------------------------------------------------------------------------
+# Batched (device-pass) featurisation for stacked shard containers
+# ---------------------------------------------------------------------------
+
+# Raw per-part statistics emitted by the device kernel, in order.
+_RAW_STATS = ("nnz", "row_mean", "row_std", "row_max", "ndiag", "bandwidth",
+              "nblocks")
+
+_SENTINEL = np.iinfo(np.int32).max
+
+
+def _distinct_live(vals: jax.Array) -> jax.Array:
+    """Count distinct values in ``vals`` ignoring ``_SENTINEL`` entries.
+
+    The vmap-safe replacement for ``np.unique(...).size``: sort pushes the
+    sentinels (dead entries) to the tail, transitions count the distinct
+    live values.
+    """
+    s = jnp.sort(vals)
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    return jnp.sum((first & (s != _SENTINEL)).astype(jnp.int32))
+
+
+def _stats_kernel(row, col, data, *, m: int, n: int, block: int) -> jax.Array:
+    """Per-part pattern statistics (``_RAW_STATS`` order), jit/vmap-able."""
+    live = data != 0
+    nnz = jnp.sum(live.astype(jnp.int32))
+    counts = jax.ops.segment_sum(live.astype(jnp.int32), row, num_segments=m)
+    row_max = jnp.max(counts)
+    mean = nnz.astype(jnp.float32) / m
+    std = jnp.sqrt(jnp.maximum(
+        jnp.mean((counts.astype(jnp.float32) - mean) ** 2), 0.0))
+    diffs = col.astype(jnp.int32) - row.astype(jnp.int32)
+    ndiag = _distinct_live(jnp.where(live, diffs, _SENTINEL))
+    bandwidth = jnp.max(jnp.where(live, jnp.abs(diffs), 0))
+    nbc = (n + block - 1) // block
+    gid = jnp.where(live, (row // block) * nbc + (col // block), _SENTINEL)
+    nblocks = _distinct_live(gid)
+    return jnp.stack([nnz.astype(jnp.float32), mean, std,
+                      row_max.astype(jnp.float32), ndiag.astype(jnp.float32),
+                      bandwidth.astype(jnp.float32),
+                      nblocks.astype(jnp.float32)])
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "block"))
+def _stats_batch(row, col, data, *, m: int, n: int, block: int) -> jax.Array:
+    kern = functools.partial(_stats_kernel, m=m, n=n, block=block)
+    return jax.vmap(kern)(row, col, data)
+
+
+def batch_features(C: COO) -> List[PatternFeatures]:
+    """Featurise a stacked batch of same-shape COO parts in ONE device pass.
+
+    ``C`` carries ``(P, capacity)`` arrays (the distributed partitioner's
+    stacked output). The vmapped statistics kernel runs once; a single
+    (P, len(_RAW_STATS)) planned pull crosses to host, from which exact
+    ``PatternFeatures`` are assembled — no per-part index-array transfers,
+    no Python loop over device work.
+    """
+    if not isinstance(C, COO) or getattr(C.data, "ndim", 1) != 2:
+        raise TypeError("batch_features expects a stacked COO container "
+                        "with (P, capacity) arrays")
+    m, n = C.shape
+    bs = PatternFeatures.BLOCK_PROBE
+    raw = _planned_pull(_stats_batch(C.row, C.col, C.data, m=m, n=n, block=bs))
+    itemsize = np.dtype(C.dtype).itemsize
+    out = []
+    for nnz_f, mean, std, row_max_f, ndiag_f, bw_f, nblocks_f in raw:
+        nnz, row_max = int(nnz_f), int(row_max_f)
+        ndiag, nblocks = int(ndiag_f), int(nblocks_f)
+        if nnz == 0:
+            out.append(PatternFeatures(m, n, 0, itemsize,
+                                       0.0, 0.0, 1, 1, 0, 0.0, 0.0, 0.0))
+            continue
+        out.append(PatternFeatures(
+            m=m, n=n, nnz=nnz, itemsize=itemsize,
+            row_nnz_mean=float(mean), row_nnz_std=float(std),
+            row_nnz_max=row_max, ndiag=ndiag, bandwidth=int(bw_f),
+            diag_fill=nnz / (ndiag * min(m, n)),
+            block_density=nnz / (nblocks * bs * bs),
+            ell_efficiency=nnz / (m * row_max),
+        ))
+    return out

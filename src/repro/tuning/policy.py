@@ -25,6 +25,7 @@ from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.convert import (SwitchPlan, plan_switch as _plan_switch,
                                 to_coo as _to_coo_fn)
@@ -32,7 +33,7 @@ from repro.core.dynamic import DEFAULT_CANDIDATES, DynamicMatrix
 from repro.core.formats import Format
 from repro.tuning.cache import SelectionCache
 from repro.tuning.engines import TuneReport, analytic_select, profile_select
-from repro.tuning.features import PatternFeatures
+from repro.tuning.features import PatternFeatures, batch_features
 from repro.tuning.tree import DecisionTree, load_default_tree
 
 MODES = ("ml", "profile", "analytic", "cached")
@@ -107,6 +108,60 @@ class FormatPolicy:
         return TuneReport(rep.best, rep.times, f"cached-miss:{rep.mode}")
 
     __call__ = select
+
+    def select_batch(self, A, x=None) -> np.ndarray:
+        """Per-shard selection over a *stacked* COO batch (leading axis P).
+
+        Returns an int32 ``(P,)`` vector of indices into ``self.candidates``
+        — the per-shard format-id vector a stacked ``SwitchDynamicMatrix``
+        dispatches on. For the ``cached``/``ml``/``analytic`` modes the
+        whole batch is featurised in one vmapped device pass
+        (:func:`repro.tuning.features.batch_features`, a single planned
+        host pull independent of P); the per-shard work that remains is
+        host-side dict/tree lookups only — no profiling runs, no per-shard
+        conversions, no index arrays through host. ``profile`` mode has no
+        batched analogue (it must execute each shard's candidates) and
+        falls back to per-shard :meth:`select` — setup-phase only.
+        """
+        A = A.concrete if isinstance(A, DynamicMatrix) else A
+        nparts = int(jax.tree_util.tree_leaves(A)[0].shape[0])
+
+        if self.mode == "profile":
+            ids = [self.candidates.index(
+                self.select(jax.tree.map(lambda a, i=i: a[i], A), x=x).best)
+                for i in range(nparts)]
+            return np.asarray(ids, np.int32)
+
+        feats = batch_features(A)
+        ids = np.empty(nparts, np.int32)
+        if self.mode == "cached":
+            backend = jax.default_backend()
+            kind = _device_kind()
+            autoflush, self.cache.autoflush = self.cache.autoflush, False
+            wrote = False
+            try:
+                for i, f in enumerate(feats):
+                    key = SelectionCache.key(f, self.candidates, backend, kind)
+                    best = self.cache.get(key)
+                    if best is None or best not in self.candidates:
+                        best = self._select_ml(f).best
+                        self.cache.put(key, best)
+                        wrote = True
+                    ids[i] = self.candidates.index(best)
+            finally:
+                self.cache.autoflush = autoflush
+            if wrote and autoflush:
+                self.cache.flush()  # one write for the whole batch
+            return ids
+
+        for i, f in enumerate(feats):
+            if self.mode == "analytic":
+                best = analytic_select(f.to_stats(),
+                                       candidates=self.candidates).best
+            else:  # "ml"
+                best = self._select_ml(f).best
+            ids[i] = self.candidates.index(best)
+        return ids
 
     def plan_for(self, A, fmt=None, x=None, **hints) -> SwitchPlan:
         """Select a format for ``A`` (unless ``fmt`` is given) and return
