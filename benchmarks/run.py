@@ -24,7 +24,6 @@ import argparse
 import json
 import os
 import sys
-import time
 
 SPMV_SUITES = ("overhead", "formats", "kernels")
 CONVERT_SUITES = ("convert", "switch")
@@ -53,36 +52,59 @@ def _emit_json(path, rows, meta):
     return path
 
 
+def _cfg_str(cfg):
+    """Compact config rendering safe for the CSV/derived field."""
+    return "/".join(f"{k}{v}" for k, v in sorted((cfg or {}).items()))
+
+
 def bench_kernels():
+    """Pallas kernels (default cfg) vs the jnp reference, plus a
+    ``kernel_tuned_*`` row per kernel: the autotuner's winner on the same
+    matrix (ephemeral cache — the bench never pollutes the user's)."""
+    import tempfile
+
     import jax
     import jax.numpy as jnp
     from repro.core import Format, banded_coo, convert, random_coo
     from repro.core.ops import spmv as core_spmv, spmm as core_spmm
     from repro.kernels import ops as kops
+    from repro.tuning import SelectionCache, kernel_tune
 
-    def _t(fn, *a, iters=10, warmup=2):
-        for _ in range(warmup):
-            jax.block_until_ready(fn(*a))
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            jax.block_until_ready(fn(*a))
-        return (time.perf_counter() - t0) / iters
+    from repro.tuning import time_fn as _t  # one timing harness for the repo
 
     rows = []
-    A = convert(banded_coo((4096, 4096), [-64, -1, 0, 1, 64]), Format.DIA)
-    x = jnp.ones((4096,), jnp.float32)
-    rows.append(("kernel_dia_spmv_interp", _t(lambda: kops.dia_spmv(A, x)) * 1e6,
-                 f"ref_us={_t(jax.jit(lambda a, v: core_spmv(a, v)), A, x) * 1e6:.0f}"))
-    Ae = convert(random_coo(0, (4096, 4096), 0.01), Format.ELL)
-    rows.append(("kernel_ell_spmv_interp", _t(lambda: kops.ell_spmv(Ae, x)) * 1e6,
-                 f"ref_us={_t(jax.jit(lambda a, v: core_spmv(a, v)), Ae, x) * 1e6:.0f}"))
-    Ac = convert(random_coo(2, (4096, 4096), 0.01), Format.CSR)
-    rows.append(("kernel_csr_spmv_interp", _t(lambda: kops.csr_spmv(Ac, x)) * 1e6,
-                 f"ref_us={_t(jax.jit(lambda a, v: core_spmv(a, v)), Ac, x) * 1e6:.0f}"))
-    Ab = convert(random_coo(1, (1024, 1024), 0.1), Format.BSR, block_size=128)
-    B = jnp.ones((1024, 128), jnp.float32)
-    rows.append(("kernel_bsr_spmm_interp", _t(lambda: kops.bsr_spmm(Ab, B)) * 1e6,
-                 f"ref_us={_t(jax.jit(lambda a, b: core_spmm(a, b)), Ab, B) * 1e6:.0f}"))
+    with tempfile.TemporaryDirectory() as td:
+        kcache = SelectionCache(os.path.join(td, "kernels.json"))
+        x = jnp.ones((4096,), jnp.float32)
+        suite = [
+            ("dia_spmv", convert(banded_coo((4096, 4096), [-64, -1, 0, 1, 64]),
+                                 Format.DIA), "spmv", x),
+            ("ell_spmv", convert(random_coo(0, (4096, 4096), 0.01),
+                                 Format.ELL), "spmv", x),
+            ("csr_spmv", convert(random_coo(2, (4096, 4096), 0.01),
+                                 Format.CSR), "spmv", x),
+            ("bsr_spmm", convert(random_coo(1, (1024, 1024), 0.1), Format.BSR,
+                                 block_size=128), "spmm",
+             jnp.ones((1024, 128), jnp.float32)),
+        ]
+        for name, A, op, operand in suite:
+            if op == "spmv":
+                ref_fn = jax.jit(lambda a, v: core_spmv(a, v))
+                kern_fn = kops.SPMV_PALLAS[type(A)]
+            else:
+                ref_fn = jax.jit(lambda a, b: core_spmm(a, b))
+                kern_fn = kops.SPMM_PALLAS[type(A)]
+            t_ref = _t(ref_fn, A, operand)
+            t_kern = _t(lambda: kern_fn(A, operand))
+            rows.append((f"kernel_{name}_interp", t_kern * 1e6,
+                         f"ref_us={t_ref * 1e6:.0f};"
+                         f"speedup_vs_ref={t_ref / t_kern:.2f}"))
+            rec = kernel_tune.tune_kernel(A, operand, op=op, cache=kcache,
+                                          iters=5, inner=2)
+            t_tuned = _t(lambda: kern_fn(A, operand, cfg=rec.cfg))
+            rows.append((f"kernel_tuned_{name}", t_tuned * 1e6,
+                         f"cfg={_cfg_str(rec.cfg)};ref_us={t_ref * 1e6:.0f};"
+                         f"speedup_vs_ref={t_ref / t_tuned:.2f}"))
     return rows
 
 

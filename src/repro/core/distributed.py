@@ -171,12 +171,17 @@ def _shard_spmv(local, remote, x_blk, hw: int, axis: AxisNames, nshards: int,
 def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "auto"):
     """Global SpMV. ``x`` is the global vector sharded P(axis).
 
-    ``backend="auto"`` routes each shard's local/remote SpMV to the Pallas
-    CSR/DIA/ELL kernels when they compile natively, else to the jnp
-    reference path (see ``repro.core.ops.resolve_backend``).
+    ``backend="auto"`` flows *into* the shard bodies unresolved: every
+    shard-local per-format SpMV routes itself through the measured
+    kernel-config cache (``repro.core.ops.kernel_route``), so a
+    multiformat distributed matrix inherits each format's tuned Pallas
+    tiles where they beat the reference path — per (format, shard-shape
+    bucket), not one coarse process-wide pick. The routing is a
+    trace-time host lookup; inside ``shard_map`` all shards share one
+    program, so the decision is identical across shards of the same
+    format branch.
     """
     axis = A.axis
-    backend = _ops.resolve_backend(backend)
 
     def body(local_s, remote_s, x_blk):
         return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,

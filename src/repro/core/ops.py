@@ -39,19 +39,46 @@ def csr_row_ids(indptr, capacity: int, m: int):
     return jnp.clip(rows, 0, m - 1)
 
 
-def resolve_backend(backend: str) -> str:
+def resolve_backend(backend: str, A=None) -> str:
     """Resolve the ``"auto"`` backend name to a concrete one.
 
-    ``auto`` routes to the Pallas kernels whenever they would actually
-    compile (TPU, or ``REPRO_FORCE_INTERPRET=0``) and to the pure-jnp
-    reference path otherwise — interpret-mode kernel bodies execute in
-    Python and would be a pessimisation, not a fast path. Concrete names
-    pass through unchanged.
+    With a matrix, ``auto`` answers from *measurement*: it routes to the
+    Pallas kernels iff the kernel-config cache
+    (``repro.tuning.kernel_tune``) holds a winner for ``A``'s (format,
+    shape bucket, backend, device) whose measured time beats the reference
+    path — a kernel that merely compiles, or that was measured slower,
+    never takes the hot path. Without a matrix (legacy callers) it falls
+    back to the coarse compile test: ``pallas`` when the kernels lower
+    natively (TPU, or ``REPRO_FORCE_INTERPRET=0``), else ``ref``.
+    Concrete names pass through unchanged.
     """
     if backend != "auto":
         return backend
+    if A is not None:
+        return kernel_route(A)[0]
     from repro.kernels import ops as kops  # lazy: keep core import-light
     return kops.auto_backend()
+
+
+def kernel_route(A, op: str = "spmv", cache=None):
+    """The measured ``"auto"`` decision for a concrete container.
+
+    Returns ``("pallas", cfg)`` when a cached kernel-tune record for
+    ``A``'s shape bucket beat the reference path (``cfg`` is the winning
+    tile config), else ``("ref", None)`` — including when no record
+    exists: an unmeasured kernel is never presumed faster. Host dict
+    lookups only; safe at trace time (the decision is baked into the
+    jitted program, so retune-then-retrace to pick up new winners).
+    """
+    if isinstance(A, _DYN_TYPES):
+        A = getattr(A, "concrete", A)
+    if not hasattr(A, "format"):
+        return "ref", None
+    from repro.tuning import kernel_tune  # lazy: tuning imports core
+    rec = kernel_tune.best_config(A, op=op, cache=cache)
+    if rec is not None and rec.speedup >= 1.0:
+        return "pallas", dict(rec.cfg)
+    return "ref", None
 
 
 def _spmv_coo(A: COO, x):
@@ -123,19 +150,24 @@ _SPMV = {COO: _spmv_coo, CSR: _spmv_csr, DIA: _spmv_dia, ELL: _spmv_ell,
          BSR: _spmv_bsr, Dense: _spmv_dense, HYB: _spmv_hyb}
 
 
-def spmv(A, x, backend: str = "ref"):
+def spmv(A, x, backend: str = "ref", cfg=None):
     """y = A @ x. ``backend='ref'`` pure-jnp; ``'pallas'`` TPU kernels where
     available (CSR/DIA/ELL/BSR/HYB), falling back to ref otherwise;
-    ``'auto'`` picks pallas exactly when the kernels compile (see
-    :func:`resolve_backend`)."""
-    backend = resolve_backend(backend)
+    ``'auto'`` picks pallas exactly when a measured kernel config beats the
+    reference path (see :func:`kernel_route`) and threads that config.
+    ``cfg`` overrides the kernel tile config (dict, e.g. ``{"tm": 256,
+    "tk": 2048}``); None uses the tuned winner (auto) or the density
+    heuristic (pallas)."""
+    if isinstance(A, _DYN_TYPES):
+        return A.spmv(x, backend=backend, cfg=cfg)
+    if backend == "auto":
+        backend, auto_cfg = kernel_route(A)
+        cfg = cfg if cfg is not None else auto_cfg
     if backend == "pallas":
         from repro.kernels import ops as kops  # lazy: keep core import-light
         fn = kops.SPMV_PALLAS.get(type(A))
         if fn is not None:
-            return fn(A, x)
-    if isinstance(A, _DYN_TYPES):
-        return A.spmv(x, backend=backend)
+            return fn(A, x, cfg=cfg)
     return _SPMV[type(A)](A, x)
 
 
@@ -196,16 +228,19 @@ _SPMM = {COO: _spmm_coo, CSR: _spmm_csr, DIA: _spmm_dia, ELL: _spmm_ell,
          BSR: _spmm_bsr, Dense: _spmm_dense, HYB: _spmm_hyb}
 
 
-def spmm(A, B, backend: str = "ref"):
-    """Y = A @ B with dense B of shape (N, K). ``backend`` as in spmv."""
-    backend = resolve_backend(backend)
+def spmm(A, B, backend: str = "ref", cfg=None):
+    """Y = A @ B with dense B of shape (N, K). ``backend``/``cfg`` as in
+    :func:`spmv` (auto routing keys on the ``op="spmm"`` records)."""
+    if isinstance(A, _DYN_TYPES):
+        return A.spmm(B, backend=backend, cfg=cfg)
+    if backend == "auto":
+        backend, auto_cfg = kernel_route(A, op="spmm")
+        cfg = cfg if cfg is not None else auto_cfg
     if backend == "pallas":
         from repro.kernels import ops as kops
         fn = kops.SPMM_PALLAS.get(type(A))
         if fn is not None:
-            return fn(A, B)
-    if isinstance(A, _DYN_TYPES):
-        return A.spmm(B, backend=backend)
+            return fn(A, B, cfg=cfg)
     return _SPMM[type(A)](A, B)
 
 

@@ -29,9 +29,11 @@ def operator(A, mesh=None, backend: str = "auto") -> Callable:
 
     Accepts a concrete container, a (Switch)DynamicMatrix, or a
     ``DistSparseMatrix`` (then ``mesh`` is required and the closure is the
-    overlapped distributed SpMV). ``backend="auto"`` routes every shard's
-    SpMV to the Pallas kernels when they compile natively, so the
-    distributed CG of the HPCG example is kernel-routed by default.
+    overlapped distributed SpMV). ``backend="auto"`` routes every SpMV —
+    per shard and per format — through the measured kernel-config cache
+    (``repro.core.ops.kernel_route``): the Pallas kernels take the hot
+    path exactly where a tuned tile config beat the reference path, so a
+    distributed HPCG CG inherits tuned kernels on each shard by default.
     """
     from repro.core.distributed import DistSparseMatrix, dist_spmv
 
@@ -118,21 +120,27 @@ def pcg(apply_A: Callable, b: jax.Array, diag_A: jax.Array,
     rr0 = _ops.dot(r0, r0)
     tol2 = jnp.asarray(tol, b.dtype) ** 2 * jnp.maximum(rr0, 1e-30)
 
+    # ||r||^2 is carried in the loop state: the convergence test reads it
+    # instead of re-reducing r every cond evaluation, and computing it next
+    # to dot(r, z) in the body lets XLA batch the two reductions into one
+    # all-reduce under sharding — one fewer global reduction per iteration.
     def cond(state):
-        _, r, _, _, k = state
-        return (_ops.dot(r, r) > tol2) & (k < maxiter)
+        _, _, _, _, rr, k = state
+        return (rr > tol2) & (k < maxiter)
 
     def body(state):
-        x, r, p, rz, k = state
+        x, r, p, rz, _, k = state
         Ap = apply_A(p)
         alpha = rz / jnp.maximum(_ops.dot(p, Ap), 1e-30)
         x = _ops.axpy(alpha, p, x)
         r = _ops.axpy(-alpha, Ap, r)
         z = minv * r
         rz_new = _ops.dot(r, z)
+        rr_new = _ops.dot(r, r)
         beta = rz_new / jnp.maximum(rz, 1e-30)
         p = _ops.waxpby(1.0, z, beta, p)
-        return x, r, p, rz_new, k + 1
+        return x, r, p, rz_new, rr_new, k + 1
 
-    x, r, p, rz, k = jax.lax.while_loop(cond, body, (x0, r0, p0, rz0, 0))
-    return CGResult(x, k, jnp.sqrt(_ops.dot(r, r)))
+    x, r, p, rz, rr, k = jax.lax.while_loop(cond, body,
+                                            (x0, r0, p0, rz0, rr0, 0))
+    return CGResult(x, k, jnp.sqrt(rr))

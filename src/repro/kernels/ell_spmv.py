@@ -6,10 +6,22 @@ warp-per-row CSR tricks (DESIGN.md §2, §8). The single data-dependent step
 is the gather of x at the stored column indices, which maps to the VPU's
 dynamic-gather path; everything else is dense multiply-reduce.
 
-Blocking strategy:
-  * grid over row tiles of ``tm`` rows;
-  * the (tm, K) column-index and value planes stream through VMEM;
-  * x resident in VMEM (ops wrapper falls back to ref when it would not fit).
+Two layouts, selected by ``layout`` (part of the kernel's tuning space):
+
+  * ``"row"`` — the container's native (tm, K) tiles; the reduction runs
+    across the minor axis. Wins where the gather dominates and K is the
+    contiguous axis (measured fastest on CPU/interpret).
+  * ``"col"`` — the same (tm, K) tiles, transposed *per tile inside the
+    kernel* (a VMEM-register reshape, never a materialized (K, M) copy —
+    a whole-array transpose would add O(nnz) HBM traffic to every call),
+    so rows map onto the 128-lane minor axis and the K-loop walks
+    contiguous row-vectors: each of the K planes is one lane-aligned
+    gather + multiply-accumulate. This is the TPU-friendly orientation.
+
+Blocking: grid over row tiles of ``tm`` rows; x resident in VMEM (ops
+wrapper falls back to ref when it would not fit). ``(tm, layout)`` are
+searched per (shape bucket, backend, device) by
+``repro.tuning.kernel_tune``.
 """
 from __future__ import annotations
 
@@ -18,37 +30,54 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
-def _ell_kernel(cols_ref, data_ref, x_ref, y_ref):
-    cols = cols_ref[...]
+def _ell_kernel_row(cols_ref, data_ref, x_ref, y_ref):
+    cols = cols_ref[...]                       # (tm, K)
     vals = data_ref[...]
     x = x_ref[...]
-    gathered = jnp.take(x, cols, mode="clip")  # (tm, K) dynamic gather
-    acc = jnp.sum(vals.astype(jnp.float32) * gathered.astype(jnp.float32), axis=1)
+    gathered = jnp.take(x, cols, mode="clip")  # VPU dynamic gather
+    acc = jnp.sum(vals.astype(jnp.float32) * gathered.astype(jnp.float32),
+                  axis=1)
     y_ref[...] = acc.astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def _ell_kernel_col(cols_ref, data_ref, x_ref, y_ref):
+    cols = cols_ref[...].T                     # (K, tm): rows on the lanes,
+    vals = data_ref[...].T                     # transposed per tile in VMEM
+    x = x_ref[...]
+    gathered = jnp.take(x, cols, mode="clip")
+    acc = jnp.sum(vals.astype(jnp.float32) * gathered.astype(jnp.float32),
+                  axis=0)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "layout", "interpret"))
 def ell_spmv(cols: jax.Array, data: jax.Array, x: jax.Array,
-             tm: int = 256, interpret: bool = True) -> jax.Array:
+             tm: int = 256, layout: str = "row",
+             interpret: bool = True) -> jax.Array:
     """y = A @ x for ELL A given as (cols[M, K], data[M, K])."""
+    if layout not in ("row", "col"):
+        raise ValueError(f"layout {layout!r} not in ('row', 'col')")
     m, k = data.shape
+    if k == 0:  # every row empty: nothing to stream, nothing to launch
+        return jnp.zeros((m,), x.dtype)
     mp = ((m + tm - 1) // tm) * tm
     if mp != m:
         cols = jnp.pad(cols, ((0, mp - m), (0, 0)))
         data = jnp.pad(data, ((0, mp - m), (0, 0)))
 
     grid = (mp // tm,)
+    in_specs = [
+        pl.BlockSpec((tm, k), lambda i: (i, 0)),
+        pl.BlockSpec((tm, k), lambda i: (i, 0)),
+        pl.BlockSpec(x.shape, lambda i: (0,)),
+    ]
+    kernel = _ell_kernel_col if layout == "col" else _ell_kernel_row
     y = pl.pallas_call(
-        _ell_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tm, k), lambda i: (i, 0)),
-            pl.BlockSpec((tm, k), lambda i: (i, 0)),
-            pl.BlockSpec(x.shape, lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((mp,), x.dtype),
         interpret=interpret,

@@ -7,6 +7,14 @@ detection in either direction — re-read on every call, so tests/CI can
 exercise the compiled-path plumbing (or pin interpret mode on a TPU host)
 without monkeypatching module state.
 
+Every SpMV/SpMM entry point takes ``cfg=`` — a kernel tile-config dict
+(e.g. ``{"tm": 256, "tk": 2048}`` for CSR, ``{"tm": 1024, "layout":
+"col"}`` for ELL). Explicit keyword arguments win over ``cfg`` entries,
+which win over :func:`default_config`'s density heuristic (tile sizes
+derived from the matrix's shape and average row nnz). Measured winning
+configs come from ``repro.tuning.kernel_tune`` and are threaded here by
+``repro.core.ops.spmv(backend="auto")``.
+
 Wrappers enforce each kernel's structural preconditions and fall back to the
 pure-jnp reference path when they do not hold (e.g. x too large for VMEM
 residency, empty BSR block rows) — the dynamic-format machinery guarantees a
@@ -16,6 +24,7 @@ from __future__ import annotations
 
 import functools
 import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +56,13 @@ def interpret_mode() -> bool:
 
 
 def auto_backend() -> str:
-    """Backend the ``"auto"`` spmv/spmm routing resolves to right now:
-    ``"pallas"`` when the kernels compile natively (TPU, or the interpret
-    override is forced off), ``"ref"`` when they would run interpreted."""
+    """Backend the kernels would *compile* to right now: ``"pallas"`` when
+    they lower natively (TPU, or the interpret override is forced off),
+    ``"ref"`` when they would run interpreted. NOTE: ``"auto"`` SpMV
+    routing no longer uses this compile test alone — it requires a
+    measured kernel config that beats the reference path (see
+    ``repro.core.ops.resolve_backend``); this predicate remains for
+    callers that only care whether native lowering is available."""
     return "ref" if interpret_mode() else "pallas"
 
 
@@ -58,41 +71,148 @@ def auto_backend() -> str:
 X_VMEM_BUDGET = 6 * 1024 * 1024
 
 
-def dia_spmv(A: DIA, x: jax.Array, tm: int = 512) -> jax.Array:
+# ---------------------------------------------------------------------------
+# Default tile configs: the per-matrix density heuristic
+# ---------------------------------------------------------------------------
+
+
+def _pow2_clamp(v: float, lo: int, hi: int) -> int:
+    """Smallest power of two >= v, clamped into [lo, hi]."""
+    p = 1 << max(0, int(np.ceil(np.log2(max(1.0, float(v))))))
+    return int(min(max(p, lo), hi))
+
+
+def _csr_tiles(m: int, nnz: int, cfg: Optional[dict],
+               tm: Optional[int] = None, tk: Optional[int] = None):
+    """(tm, tk) for the CSR kernel: explicit args > cfg > density heuristic.
+
+    Heuristic: tm rides the VPU sweet spot (256 rows, or the whole matrix
+    when smaller); tk sizes each nnz chunk to roughly a quarter of the
+    average tile's window (avg row nnz x tm / 4) so sparse tiles take one
+    cheap chunk while dense tiles stream several full ones.
+    """
+    cfg = cfg or {}
+    tm = int(tm if tm is not None else cfg.get("tm") or _pow2_clamp(min(m, 256), 8, 8192))
+    avg = max(1.0, nnz / max(1, m))
+    tk = int(tk if tk is not None else cfg.get("tk") or _pow2_clamp(avg * tm / 4, 256, 4096))
+    return tm, tk
+
+
+def resolve_config(A, cfg: Optional[dict], op: str = "spmv") -> dict:
+    """The tile config a wrapper should run with: an explicit ``cfg``
+    wins; otherwise the *tuned* winner cached for ``A``'s shape bucket
+    (host dict lookup, trace-time only); otherwise the density heuristic.
+
+    Consulting the tuned cache here — not just on the ``"auto"`` route —
+    means resolve-then-dispatch callers (``resolve_backend("auto", A)``
+    followed by ``spmv(backend="pallas")``) also run the measured winner
+    rather than silently falling back to an untuned default.
+    """
+    if cfg is not None:
+        return cfg
+    try:
+        from repro.tuning import kernel_tune  # lazy: tuning imports kernels
+        rec = kernel_tune.best_config(A, op=op)
+        if rec is not None:
+            return dict(rec.cfg)
+    except ImportError:  # pragma: no cover - partial installs
+        pass
+    return default_config(A)
+
+
+def _pick(explicit, cfg: dict, key: str, A):
+    """The one precedence rule for kernel params: explicit kwarg > ``cfg``
+    entry > density-heuristic default (guards tuned records that predate a
+    newly added key)."""
+    if explicit is not None:
+        return explicit
+    v = cfg.get(key)
+    return v if v is not None else default_config(A)[key]
+
+
+def default_config(A) -> dict:
+    """Density-heuristic tile config for ``A`` (the no-tuning default).
+
+    ``repro.tuning.kernel_tune.best_config`` supersedes this with a
+    measured winner when one is cached for the matrix's shape bucket
+    (see :func:`resolve_config`).
+    """
+    m = A.shape[0]
+    nnz = max(1, int(getattr(A, "nnz", 1)))
+    if isinstance(A, CSR):
+        tm, tk = _csr_tiles(m, nnz, None)
+        return {"tm": tm, "tk": tk}
+    if isinstance(A, ELL):
+        # interpret mode pays per grid step: prefer one big tile; native
+        # Mosaic wants lane-aligned (K, tm) tiles in VMEM.
+        if interpret_mode():
+            return {"tm": _pow2_clamp(m, 8, 8192), "layout": "row"}
+        return {"tm": 256, "layout": "col"}
+    if isinstance(A, DIA):
+        return {"tm": _pow2_clamp(min(m, 512), 8, 2048)}
+    if isinstance(A, BSR):
+        return {"tn": 128}
+    if isinstance(A, HYB):
+        return {"ell": default_config(A.ell)}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# SpMV / SpMM entry points (all take cfg=)
+# ---------------------------------------------------------------------------
+
+
+def dia_spmv(A: DIA, x: jax.Array, tm: Optional[int] = None,
+             cfg: Optional[dict] = None) -> jax.Array:
+    cfg = resolve_config(A, cfg)
+    tm = int(_pick(tm, cfg, "tm", A))
     n = A.shape[1]
     if (n + 2 * (A.data.shape[1] + tm)) * x.dtype.itemsize > X_VMEM_BUDGET:
         from repro.core import ops as core_ops
         return core_ops._spmv_dia(A, x)
-    return _dia.dia_spmv(A.offsets, A.data, x, n, tm=tm, interpret=interpret_mode())
+    return _dia.dia_spmv(A.offsets, A.data, x, n, tm=tm,
+                         interpret=interpret_mode())
 
 
-def ell_spmv(A: ELL, x: jax.Array, tm: int = 256) -> jax.Array:
+def ell_spmv(A: ELL, x: jax.Array, tm: Optional[int] = None,
+             layout: Optional[str] = None,
+             cfg: Optional[dict] = None) -> jax.Array:
+    cfg = resolve_config(A, cfg)
+    tm = int(_pick(tm, cfg, "tm", A))
+    layout = _pick(layout, cfg, "layout", A)
     if x.size * x.dtype.itemsize > X_VMEM_BUDGET:
         from repro.core import ops as core_ops
         return core_ops._spmv_ell(A, x)
-    return _ell.ell_spmv(A.cols, A.data, x, tm=tm, interpret=interpret_mode())
+    return _ell.ell_spmv(A.cols, A.data, x, tm=tm, layout=layout,
+                         interpret=interpret_mode())
 
 
-def csr_spmv(A: CSR, x: jax.Array, tm: int = 256, tk: int = 512) -> jax.Array:
-    """CSR SpMV via the row-tiled Pallas kernel; the (rows, indices, data)
-    arrays plus x must fit the VMEM residency budget, else ref fallback."""
+def csr_spmv(A: CSR, x: jax.Array, tm: Optional[int] = None,
+             tk: Optional[int] = None,
+             cfg: Optional[dict] = None) -> jax.Array:
+    """CSR SpMV via the 2-D row x nnz tiled Pallas kernel; the
+    (rows, indices, data) arrays plus x must fit the VMEM residency
+    budget, else ref fallback."""
     from repro.core import ops as core_ops
     resident = (3 * A.capacity + x.size) * 4
     if resident > X_VMEM_BUDGET:
         return core_ops._spmv_csr(A, x)
+    tm, tk = _csr_tiles(A.shape[0], A.nnz, resolve_config(A, cfg), tm=tm, tk=tk)
     rows = core_ops.csr_row_ids(A.indptr, A.capacity, A.shape[0])
     return _csr.csr_spmv(A.indptr, rows, A.indices, A.data, x, tm=tm, tk=tk,
                          interpret=interpret_mode())
 
 
-def hyb_spmv(A: HYB, x: jax.Array) -> jax.Array:
+def hyb_spmv(A: HYB, x: jax.Array, cfg: Optional[dict] = None) -> jax.Array:
     """HYB SpMV: ELL kernel for the regular planes + the CSR kernel for the
     COO overflow tail. The tail's row ids are already in hand, so the CSR
-    layout is assembled directly (stable sort + bincount row pointers, no
-    searchsorted row recovery); everything fuses with the caller under jit,
-    and plan-built tails are already row-sorted so the sort is cheap."""
+    layout is assembled directly (stable sort + bincount row pointers);
+    everything fuses with the caller under jit, and plan-built tails are
+    already row-sorted so the sort is cheap. ``cfg`` nests per-part
+    configs: ``{"ell": {...}, "csr": {...}}``."""
     from repro.core import ops as core_ops
-    y = ell_spmv(A.ell, x)
+    cfg = resolve_config(A, cfg)
+    y = ell_spmv(A.ell, x, cfg=cfg.get("ell"))
     c = A.coo
     if (3 * c.capacity + x.size) * 4 > X_VMEM_BUDGET:
         return y + core_ops._spmv_coo(c, x)
@@ -101,8 +221,9 @@ def hyb_spmv(A: HYB, x: jax.Array) -> jax.Array:
     indptr = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32),
          jnp.cumsum(jnp.bincount(rows, length=A.shape[0])).astype(jnp.int32)])
+    tm, tk = _csr_tiles(A.shape[0], c.nnz, cfg.get("csr"))
     tail = _csr.csr_spmv(indptr, rows, c.col[order], c.data[order], x,
-                         interpret=interpret_mode())
+                         tm=tm, tk=tk, interpret=interpret_mode())
     return y + tail
 
 
@@ -119,7 +240,10 @@ def _bsr_rows_nonempty(A: BSR) -> bool:
     return bool(np.all(np.diff(indptr) >= 1)) and int(indptr[-1]) == A.nblocks
 
 
-def bsr_spmm(A: BSR, B: jax.Array, tn: int = 128) -> jax.Array:
+def bsr_spmm(A: BSR, B: jax.Array, tn: Optional[int] = None,
+             cfg: Optional[dict] = None, _op: str = "spmm") -> jax.Array:
+    cfg = resolve_config(A, cfg, op=_op)
+    tn = int(_pick(tn, cfg, "tn", A))
     if not _bsr_rows_nonempty(A):
         from repro.core import ops as core_ops
         return core_ops._spmm_bsr(A, B)
@@ -128,8 +252,10 @@ def bsr_spmm(A: BSR, B: jax.Array, tn: int = 128) -> jax.Array:
                          tn=tn, interpret=interpret_mode())
 
 
-def bsr_spmv(A: BSR, x: jax.Array, tn: int = 128) -> jax.Array:
-    return bsr_spmm(A, x[:, None], tn=tn)[:, 0]
+def bsr_spmv(A: BSR, x: jax.Array, tn: Optional[int] = None,
+             cfg: Optional[dict] = None) -> jax.Array:
+    # tuned as op="spmv": a BSR spmv record must not be read as spmm's
+    return bsr_spmm(A, x[:, None], tn=tn, cfg=cfg, _op="spmv")[:, 0]
 
 
 # Registries consumed by repro.core.ops.spmv/spmm(backend="pallas").

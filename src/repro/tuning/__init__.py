@@ -14,11 +14,15 @@ Retrain the packaged model on the current backend with
 ``python -m repro.tuning.corpus``.
 """
 from repro.tuning.cache import (CACHE_PATH_ENV, SelectionCache,
-                                default_cache_path, pattern_signature)
+                                decode_decision, default_cache_path,
+                                encode_decision, pattern_signature)
 from repro.tuning.engines import (GATHER_PENALTY, HBM_BW, TuneReport,
                                   analytic_select, calibrate_gather_penalty,
                                   predicted_bytes, profile_select, time_fn)
 from repro.tuning.features import FEATURE_NAMES, PatternFeatures, PatternStats
+from repro.tuning.kernel_tune import (KernelRecord, best_config,
+                                      best_config_for, default_grid,
+                                      kernel_key, shape_bucket, tune_kernel)
 from repro.tuning.policy import MODES, FormatPolicy
 from repro.tuning.tree import (DEFAULT_TREE_PATH, DecisionTree,
                                load_default_tree)
@@ -28,9 +32,11 @@ __all__ = [
     "PatternFeatures", "PatternStats", "FEATURE_NAMES",
     "DecisionTree", "load_default_tree", "DEFAULT_TREE_PATH",
     "SelectionCache", "pattern_signature", "default_cache_path",
-    "CACHE_PATH_ENV",
+    "CACHE_PATH_ENV", "encode_decision", "decode_decision",
     "TuneReport", "analytic_select", "profile_select", "predicted_bytes",
     "calibrate_gather_penalty", "time_fn", "HBM_BW", "GATHER_PENALTY",
+    "KernelRecord", "tune_kernel", "best_config", "best_config_for",
+    "default_grid", "kernel_key", "shape_bucket",
 ]
 
 # The corpus generator/trainer is import-on-demand (repro.tuning.corpus):

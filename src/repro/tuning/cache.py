@@ -10,6 +10,20 @@ not viable".
 
 The store is a flat JSON dict written atomically (tmp + rename); corrupt or
 missing files degrade to an empty cache, never to an error.
+
+Two value schemas share the store:
+
+* v1 (legacy) — a bare format name (``"DIA"``). Still written by
+  :meth:`SelectionCache.put` and always readable.
+* v2 — a full *(format, backend, kernel config, mode tag)* decision
+  encoded as ``"v2|DIA|pallas|cpu-interp|{\"tm\": 512}"`` via
+  :func:`encode_decision`. The read path (:meth:`get` /
+  :meth:`get_decision`) accepts both, so caches written by older
+  versions keep working unchanged.
+
+The ``kernel:`` key namespace (raw JSON values, see
+``repro.tuning.kernel_tune``) rides the same store and flush path through
+:meth:`get_raw`/:meth:`put_raw`.
 """
 from __future__ import annotations
 
@@ -17,12 +31,58 @@ import hashlib
 import json
 import os
 import warnings
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.formats import Format
 from repro.tuning.features import PatternFeatures
 
 CACHE_PATH_ENV = "REPRO_TUNING_CACHE"
+
+# Versioned decision-value schema ("v2|FMT|backend|mode-tag|cfg-json").
+# ``mode-tag`` records the kernel-execution mode the pinned (backend, cfg)
+# was measured under (``kernel_tune.backend_tag()``, e.g. "cpu-interp"):
+# readers must not replay a pin tuned in one mode against another.
+DECISION_PREFIX = "v2|"
+
+
+def encode_decision(fmt: Format, backend: Optional[str] = None,
+                    cfg: Optional[dict] = None,
+                    tag: Optional[str] = None) -> str:
+    """Serialize a (format, backend, kernel cfg, mode tag) decision
+    (schema v2)."""
+    return (f"{DECISION_PREFIX}{Format(fmt).name}|{backend or ''}|{tag or ''}|"
+            f"{json.dumps(cfg, sort_keys=True) if cfg else ''}")
+
+
+def decode_decision(value: str) -> Tuple[Optional[Format], Optional[str],
+                                         Optional[dict], Optional[str]]:
+    """Parse a stored decision value, either schema.
+
+    Returns ``(format, backend, cfg, tag)``; backend/cfg/tag are None for
+    v1 values (or when the v2 fields are empty). Unknown formats decode
+    to all-None — stale entries from an older format zoo.
+    """
+    backend: Optional[str] = None
+    cfg: Optional[dict] = None
+    tag: Optional[str] = None
+    name = value
+    if value.startswith(DECISION_PREFIX):
+        try:
+            name, backend_s, tag_s, cfg_s = \
+                value[len(DECISION_PREFIX):].split("|", 3)
+        except ValueError:
+            return None, None, None, None
+        backend = backend_s or None
+        tag = tag_s or None
+        if cfg_s:
+            try:
+                cfg = json.loads(cfg_s)
+            except ValueError:
+                cfg = None
+    try:
+        return Format[name], backend, cfg, tag
+    except KeyError:
+        return None, None, None, None
 
 
 def default_cache_path() -> str:
@@ -115,15 +175,43 @@ class SelectionCache:
         return f"{pattern_signature(feats)}|{backend}|{device_kind}|{cand}"
 
     def get(self, key: str) -> Optional[Format]:
-        name = self._load().get(key)
-        if name is None:
+        value = self._load().get(key)
+        if value is None:
             return None
-        try:
-            return Format[name]
-        except KeyError:
-            return None  # stale entry from an older format zoo
+        return decode_decision(value)[0]
 
     def put(self, key: str, fmt: Format) -> None:
         self._load()[key] = Format(fmt).name
+        if self.autoflush:
+            self.flush()
+
+    # -- v2 decision tuples (format, backend, kernel cfg, mode tag) ----------
+
+    def get_decision(self, key: str) -> Optional[Tuple[Format, Optional[str],
+                                                       Optional[dict],
+                                                       Optional[str]]]:
+        value = self._load().get(key)
+        if value is None:
+            return None
+        fmt, backend, cfg, tag = decode_decision(value)
+        if fmt is None:
+            return None  # stale/corrupt entry — treat as a miss
+        return fmt, backend, cfg, tag
+
+    def put_decision(self, key: str, fmt: Format,
+                     backend: Optional[str] = None,
+                     cfg: Optional[dict] = None,
+                     tag: Optional[str] = None) -> None:
+        self._load()[key] = encode_decision(fmt, backend, cfg, tag)
+        if self.autoflush:
+            self.flush()
+
+    # -- raw string values (the kernel: namespace) ---------------------------
+
+    def get_raw(self, key: str) -> Optional[str]:
+        return self._load().get(key)
+
+    def put_raw(self, key: str, value: str) -> None:
+        self._load()[key] = str(value)
         if self.autoflush:
             self.flush()

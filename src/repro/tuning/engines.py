@@ -57,13 +57,24 @@ def calibrate_gather_penalty(n: int = 1 << 18, iters: int = 5) -> float:
 
 @dataclasses.dataclass
 class TuneReport:
+    """A selection decision: the winning format plus — when the engine
+    resolved them — the kernel backend and tile config to run it with.
+
+    ``backend``/``cfg`` are None when the decision is format-only (the
+    historical schema); ``repro.core.ops.spmv(backend="auto")`` then
+    routes per call from the kernel-config cache instead.
+    """
+
     best: Format
     times: Dict[Format, float]  # seconds (measured or predicted)
     mode: str
+    backend: Optional[str] = None   # "ref" | "pallas" | None (unresolved)
+    cfg: Optional[dict] = None      # kernel tile config for `backend`
 
     def __repr__(self):
         rows = ", ".join(f"{f.name}={t:.3e}s" for f, t in self.times.items())
-        return f"TuneReport(best={self.best.name}, mode={self.mode}, {rows})"
+        extra = f", backend={self.backend}, cfg={self.cfg}" if self.backend else ""
+        return f"TuneReport(best={self.best.name}, mode={self.mode}{extra}, {rows})"
 
 
 def predicted_bytes(stats: PatternStats, fmt: Format,
@@ -141,11 +152,23 @@ def profile_select(A, x,
                    candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
                    iters: int = 10, backend: str = "ref",
                    conv_kwargs: Optional[dict] = None,
-                   inner: int = 4) -> TuneReport:
-    """The paper's profiling auto-tuner: convert, compile, time, pick best."""
+                   inner: int = 4,
+                   backends: Optional[Sequence[str]] = None) -> TuneReport:
+    """The paper's profiling auto-tuner: convert, compile, time, pick best.
+
+    ``backends`` extends the search from formats to (format, backend)
+    pairs: with ``("ref", "pallas")`` each candidate format is also timed
+    through its Pallas kernel (using the tuned tile config for its shape
+    bucket when one is cached, else the density-heuristic default), and
+    the report's ``backend``/``cfg`` record the winning pair. Default
+    (None) keeps the historical ref-only behaviour — ``times`` stays
+    keyed by Format either way, holding each format's best time.
+    """
     A = A.concrete if isinstance(A, DynamicMatrix) else A
     conv_kwargs = conv_kwargs or {}
+    backends = tuple(backends) if backends is not None else (backend,)
     times: Dict[Format, float] = {}
+    winner: Dict[Format, tuple] = {}
     skipped: Dict[str, str] = {}
     for fmt in candidates:
         fmt = Format(fmt)
@@ -159,11 +182,30 @@ def profile_select(A, x,
             # e.g. BSR on a non-block-aligned shape
             skipped[fmt.name] = f"{type(e).__name__}: {e}"
             continue
-        fn = jax.jit(lambda a, v: _ops.spmv(a, v, backend=backend))
-        times[fmt] = time_fn(fn, Af, x, iters=iters, inner=inner)
+        for b in backends:
+            cfg = None
+            if b == "pallas":
+                from repro.kernels import ops as kops
+                if type(Af) not in kops.SPMV_PALLAS:
+                    # no kernel for this format: timing "pallas" would just
+                    # re-run the ref fallback and could record a phantom win
+                    continue
+                from repro.tuning import kernel_tune
+                rec = kernel_tune.best_config(Af)
+                cfg = dict(rec.cfg) if rec is not None else None
+            fn = jax.jit(lambda a, v, b=b, cfg=cfg: _ops.spmv(
+                a, v, backend=b, cfg=cfg))
+            t = time_fn(fn, Af, x, iters=iters, inner=inner)
+            if fmt not in times or t < times[fmt]:
+                times[fmt] = t
+                winner[fmt] = (b, cfg)
     if not times:
         raise ValueError(
             f"profile_select: every candidate format failed conversion for "
             f"matrix of shape {tuple(A.shape)}; skipped candidates: {skipped}")
     best = min(times, key=times.get)
-    return TuneReport(best, times, "profile")
+    b, cfg = winner[best]
+    resolved = len(backends) > 1 or backends != ("ref",)
+    return TuneReport(best, times, "profile",
+                      backend=b if resolved else None,
+                      cfg=cfg if resolved else None)

@@ -98,14 +98,25 @@ class FormatPolicy:
             return self._select_ml(feats)
 
         # mode == "cached"
+        from repro.tuning import kernel_tune
+
         key = SelectionCache.key(feats, self.candidates, jax.default_backend(),
                                  _device_kind())
-        hit = self.cache.get(key)
-        if hit is not None and hit in self.candidates:
-            return TuneReport(hit, {}, "cached")
+        hit = self.cache.get_decision(key)
+        if hit is not None and hit[0] in self.candidates:
+            fmt, kb, cfg, tag = hit
+            if kb is not None and tag != kernel_tune.backend_tag():
+                # the pinned (backend, cfg) was measured under a different
+                # kernel-execution mode (interp vs native): never replay it —
+                # re-derive the pin from this mode's kernel records instead.
+                kb, cfg = self._kernel_decision(fmt, feats)
+            return TuneReport(fmt, {}, "cached", backend=kb, cfg=cfg)
         rep = self._select_ml(feats)
-        self.cache.put(key, rep.best)
-        return TuneReport(rep.best, rep.times, f"cached-miss:{rep.mode}")
+        kb, cfg = self._kernel_decision(rep.best, feats)
+        self.cache.put_decision(key, rep.best, kb, cfg,
+                                tag=kernel_tune.backend_tag() if kb else None)
+        return TuneReport(rep.best, rep.times, f"cached-miss:{rep.mode}",
+                          backend=kb, cfg=cfg)
 
     __call__ = select
 
@@ -140,12 +151,16 @@ class FormatPolicy:
             autoflush, self.cache.autoflush = self.cache.autoflush, False
             wrote = False
             try:
+                from repro.tuning import kernel_tune
+                ktag = kernel_tune.backend_tag()
                 for i, f in enumerate(feats):
                     key = SelectionCache.key(f, self.candidates, backend, kind)
                     best = self.cache.get(key)
                     if best is None or best not in self.candidates:
                         best = self._select_ml(f).best
-                        self.cache.put(key, best)
+                        kb, cfg = self._kernel_decision(best, f)
+                        self.cache.put_decision(key, best, kb, cfg,
+                                                tag=ktag if kb else None)
                         wrote = True
                     ids[i] = self.candidates.index(best)
             finally:
@@ -175,6 +190,25 @@ class FormatPolicy:
         if fmt is None:
             fmt = self.select(A, x=x).best
         return _plan_switch(A, Format(fmt), **hints)
+
+    def _kernel_decision(self, fmt: Format, feats: PatternFeatures):
+        """(backend, cfg) to pin alongside a format pick: the tuned Pallas
+        tile config for the pattern's shape bucket when one is cached AND
+        measured faster than ref; (None, None) otherwise — the decision
+        stays format-only and ``spmv(backend="auto")`` routes per call.
+
+        The lookup goes through *this policy's* cache: format selections
+        and kernel records share one JSON store, so a policy configured
+        with its own cache file must consult that file, not the process
+        default."""
+        from repro.tuning import kernel_tune
+
+        rec = kernel_tune.best_config_for(Format(fmt), feats.m, feats.n,
+                                          max(1, feats.nnz),
+                                          cache=self.cache)
+        if rec is not None and rec.speedup >= 1.0:
+            return "pallas", dict(rec.cfg)
+        return None, None
 
     def _select_ml(self, feats: PatternFeatures) -> TuneReport:
         tree = self.tree

@@ -96,6 +96,105 @@ def test_csr_kernel_tile_sizes(tm, tk):
                                rtol=1e-4, atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# Tile-config sweeps over adversarial shapes (the autotuner's search space)
+# ---------------------------------------------------------------------------
+# Every config the tuner may emit must agree with the reference SpMV to
+# f32 machine precision (verified against a float64 dense oracle — exact
+# bitwise identity with ref is not the spec: different tile boundaries
+# legally reassociate the f32 accumulation) and must be bitwise
+# *deterministic*: the same config always produces the same bits.
+
+CSR_CFG_GRID = [{"tm": 32, "tk": 64}, {"tm": 128, "tk": 512},
+                {"tm": 512, "tk": 128}, {"tm": 1024, "tk": 4096}]
+
+# m (and n) chosen so m % tm != 0 for every tm in the grid: the last row
+# tile is ragged and the last nnz chunk is partial.
+CSR_RAGGED_SHAPES = [((97, 83), 0.08), ((513, 401), 0.03),
+                     ((1021, 999), 0.01)]
+
+
+@pytest.mark.parametrize("cfg", CSR_CFG_GRID)
+@pytest.mark.parametrize("shape,density", CSR_RAGGED_SHAPES)
+def test_csr_kernel_cfg_sweep_ragged(shape, density, cfg):
+    A = convert(random_coo(21, shape, density=density), Format.CSR)
+    x = jnp.asarray(RNG.standard_normal(shape[1]).astype(np.float32))
+    y = kops.csr_spmv(A, x, cfg=cfg)
+    oracle = to_dense_np(A).astype(np.float64) @ np.asarray(x, np.float64)
+    np.testing.assert_allclose(np.asarray(y, np.float64), oracle,
+                               rtol=2e-5, atol=2e-5)
+    # bitwise determinism of a fixed config
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(kops.csr_spmv(A, x, cfg=cfg)))
+
+
+def test_csr_kernel_mixed_magnitude_rows():
+    """The segmented reduction must keep a tiny row's own relative accuracy
+    when it shares an nnz chunk with huge rows — a plain prefix-sum
+    difference loses it to catastrophic cancellation (error scales with
+    the chunk's running total, not the row's magnitude)."""
+    D = np.zeros((8, 8), np.float32)
+    D[0:4, :4] = 1e7
+    D[4, :4] = 1e-3
+    A = convert(coo_from_dense_np(D), Format.CSR)
+    x = jnp.ones((8,), jnp.float32)
+    y = np.asarray(kops.csr_spmv(A, x, cfg={"tm": 8, "tk": 32}))
+    assert y[4] == pytest.approx(4e-3, rel=1e-6), y
+
+
+@pytest.mark.parametrize("cfg", CSR_CFG_GRID)
+def test_csr_kernel_cfg_sweep_empty_rows(cfg):
+    """Entire empty row-tiles (zero-width nnz windows) under every config."""
+    D = np.zeros((300, 300), np.float32)
+    mask = RNG.random((100, 300)) < 0.05
+    D[200:, :] = np.where(mask, RNG.standard_normal((100, 300)), 0).astype(np.float32)
+    A = convert(coo_from_dense_np(D, capacity=D.astype(bool).sum() + 333),
+                Format.CSR)
+    x = jnp.asarray(RNG.standard_normal(300).astype(np.float32))
+    y = kops.csr_spmv(A, x, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(y, np.float64),
+                               D.astype(np.float64) @ np.asarray(x, np.float64),
+                               rtol=2e-5, atol=2e-5)
+
+
+ELL_CFG_GRID = [{"tm": 32, "layout": "row"}, {"tm": 32, "layout": "col"},
+                {"tm": 256, "layout": "col"}, {"tm": 1024, "layout": "row"}]
+
+
+@pytest.mark.parametrize("cfg", ELL_CFG_GRID)
+@pytest.mark.parametrize("shape,density", [((97, 83), 0.08), ((513, 401), 0.03)])
+def test_ell_kernel_cfg_sweep_ragged(shape, density, cfg):
+    A = convert(random_coo(22, shape, density=density), Format.ELL)
+    x = jnp.asarray(RNG.standard_normal(shape[1]).astype(np.float32))
+    y = kops.ell_spmv(A, x, cfg=cfg)
+    oracle = to_dense_np(A).astype(np.float64) @ np.asarray(x, np.float64)
+    np.testing.assert_allclose(np.asarray(y, np.float64), oracle,
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(kops.ell_spmv(A, x, cfg=cfg)))
+
+
+@pytest.mark.parametrize("cfg", ELL_CFG_GRID)
+def test_ell_kernel_k0(cfg):
+    """k=0 ELL (all rows empty): nothing to stream, result is exactly 0."""
+    from repro.core.formats import ELL
+    A = ELL(jnp.zeros((70, 0), jnp.int32), jnp.zeros((70, 0), jnp.float32),
+            (70, 50), 0)
+    x = jnp.asarray(RNG.standard_normal(50).astype(np.float32))
+    y = kops.ell_spmv(A, x, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(70, np.float32))
+
+
+@pytest.mark.parametrize("cfg", [{"tm": 32}, {"tm": 128}, {"tm": 1024}])
+def test_dia_kernel_cfg_sweep_ragged(cfg):
+    A = convert(banded_coo((517, 517), [-19, -3, 0, 3, 19]), Format.DIA)
+    x = jnp.asarray(RNG.standard_normal(517).astype(np.float32))
+    y = kops.dia_spmv(A, x, cfg=cfg)
+    oracle = to_dense_np(A).astype(np.float64) @ np.asarray(x, np.float64)
+    np.testing.assert_allclose(np.asarray(y, np.float64), oracle,
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_csr_kernel_empty_rows_and_padding():
     """Empty rows cost nothing (zero-width windows); capacity padding past
     indptr[-1] is never read."""
