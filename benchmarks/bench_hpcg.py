@@ -1,0 +1,77 @@
+"""HPCG solver suite: CG vs Jacobi-PCG vs MG-PCG (repro.mg).
+
+The paper benchmarks HPCG with the preconditioner disabled (§IV-B) — the
+reference SymGS sweep is sequential. ``repro.mg`` restores the multigrid
+preconditioner with a multicolored (vector-parallel) SymGS smoother, so
+this suite measures what that buys: iterations-to-tolerance and
+wall-clock per solve for
+
+  hpcg_cg_*             unpreconditioned CG (the paper's configuration)
+  hpcg_pcg_jacobi_*     Jacobi (diag) PCG — the historical stand-in
+  hpcg_pcg_mg_csr_*     MG-PCG, every level/color block uniform CSR
+  hpcg_pcg_mg_multi_*   MG-PCG, per-level formats via FormatPolicy("ml")
+
+plus ``hpcg_mg_build_*`` (hierarchy construction, cold). Rows land in
+``BENCH_hpcg.json`` via ``python -m benchmarks.run --only hpcg``.
+"""
+from __future__ import annotations
+
+
+def run(grids=((8, 8, 8), (16, 16, 16)), tol: float = 1e-8,
+        maxiter: int = 400, iters: int = 3):
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import Format, convert, extract_diagonal, hpcg, spmv
+    from repro.core.solvers import cg, pcg
+    from repro.mg import build_hierarchy
+    from repro.tuning import FormatPolicy, time_fn
+
+    rows = []
+    for grid in grids:
+        tag = "x".join(map(str, grid))
+        prob = hpcg.generate_problem(*grid)
+        A = convert(hpcg.to_coo(prob), Format.CSR)
+        b = jnp.asarray(hpcg.rhs_for_ones(prob))
+        apply_A = lambda v: spmv(A, v, backend="auto")  # noqa: E731
+        diag = extract_diagonal(A)
+
+        t0 = time.perf_counter()
+        hier_csr = build_hierarchy(prob, fmt=Format.CSR)
+        build_s = time.perf_counter() - t0
+        rows.append((f"hpcg_mg_build_{tag}", build_s * 1e6,
+                     f"levels={hier_csr.nlevels}"))
+        hier_multi = build_hierarchy(prob, policy=FormatPolicy("ml"))
+        lv_fmts = ">".join(r["A"] for r in hier_multi.formats())
+
+        solvers = {
+            "cg": jax.jit(lambda bb: cg(apply_A, bb, tol=tol,
+                                        maxiter=maxiter)),
+            "pcg_jacobi": jax.jit(lambda bb: pcg(apply_A, bb, diag, tol=tol,
+                                                 maxiter=maxiter)),
+            "pcg_mg_csr": jax.jit(lambda bb: pcg(
+                apply_A, bb, tol=tol, maxiter=maxiter,
+                apply_M=hier_csr.apply_M())),
+            "pcg_mg_multi": jax.jit(lambda bb: pcg(
+                apply_A, bb, tol=tol, maxiter=maxiter,
+                apply_M=hier_multi.apply_M())),
+        }
+        for name, solve in solvers.items():
+            res = jax.block_until_ready(solve(b))  # compile + warm
+            t = time_fn(solve, b, iters=iters, warmup=0)
+            k = int(res.iters)
+            err = float(np.abs(np.asarray(res.x) - 1.0).max())
+            derived = f"iters={k};max_err={err:.1e}"
+            if name == "pcg_mg_multi":
+                derived += f";levels={lv_fmts}"
+            rows.append((f"hpcg_{name}_{tag}", t * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(",".join(str(c) for c in r))

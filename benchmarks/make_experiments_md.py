@@ -1,9 +1,9 @@
 """Generate EXPERIMENTS.md §Dry-run + §Roofline + §Distributed tables.
 
 Usage: PYTHONPATH=src python -m benchmarks.make_experiments_md
-Reads results/dryrun (roofline) and BENCH_dist.json (the ``scaling`` suite
-of benchmarks/run.py); writes the tables to results/generated_tables.md
-for inclusion.
+Reads results/dryrun (roofline), BENCH_dist.json (the ``scaling`` suite of
+benchmarks/run.py) and BENCH_hpcg.json (the ``hpcg`` solver suite); writes
+the tables to results/generated_tables.md for inclusion.
 """
 from __future__ import annotations
 
@@ -68,6 +68,36 @@ def dist_table() -> str:
     return "\n".join(out)
 
 
+def hpcg_table() -> str:
+    """Pivot BENCH_hpcg.json's solver rows: solver x grid."""
+    path = os.path.join(ROOT, "BENCH_hpcg.json")
+    try:
+        rows = json.load(open(path)).get("rows", [])
+    except (OSError, ValueError):
+        return "_no BENCH_hpcg.json — run `python -m benchmarks.run --only hpcg`_"
+    cells = {}  # solver -> {grid: (ms, derived)}
+    for r in rows:
+        m = re.fullmatch(r"hpcg_(.+?)_(\d+x\d+x\d+)", r["name"])
+        if not m:
+            continue
+        cells.setdefault(m.group(1), {})[m.group(2)] = (
+            r["us_per_call"] / 1e3, r.get("derived", ""))
+    if not cells:
+        return "_BENCH_hpcg.json holds no hpcg rows_"
+    grids = sorted({g for v in cells.values() for g in v},
+                   key=lambda g: [int(d) for d in g.split("x")])
+    out = ["| solver (ms) | " + " | ".join(grids) + " |",
+           "|---|" + "---|" * len(grids)]
+    for solver in sorted(cells):
+        vals = []
+        for g in grids:
+            ms, derived = cells[solver].get(g, (None, ""))
+            vals.append("-" if ms is None else
+                        f"{ms:.1f}" + (f" ({derived})" if derived else ""))
+        out.append(f"| {solver} | " + " | ".join(vals) + " |")
+    return "\n".join(out)
+
+
 def main():
     parts = ["## Generated tables (benchmarks/make_experiments_md.py)\n"]
     parts.append("### Dry-run, single pod (16x16 = 256 chips)\n")
@@ -78,6 +108,8 @@ def main():
     parts.append(rl.table("pod"))
     parts.append("\n### Distributed scaling (BENCH_dist.json, forced host devices)\n")
     parts.append(dist_table())
+    parts.append("\n### HPCG solvers: CG vs Jacobi-PCG vs MG-PCG (BENCH_hpcg.json)\n")
+    parts.append(hpcg_table())
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         f.write("\n".join(parts) + "\n")

@@ -9,14 +9,18 @@ Prints ``name,us_per_call,derived`` CSV and persists the perf trajectory:
   bench_convert    §III-B  conversion (format-switch) amortisation
   switch           —       host-sync vs device-resident switch overhead
   bench_kernels    —       Pallas kernels (interpret) vs pure-jnp reference
+  bench_hpcg       —       HPCG solves: CG vs Jacobi-PCG vs MG-PCG
+                           (iterations-to-tol + wall-clock, uniform-CSR vs
+                           per-level multiformat hierarchies)
   roofline         —       dry-run roofline table (if results are present)
 
 SpMV-side suites (formats/kernels/overhead) are written to
 ``BENCH_spmv.json``, conversion-side suites (convert/switch) to
-``BENCH_convert.json`` and the distributed scaling suite to
-``BENCH_dist.json`` in ``--json-dir`` (default: cwd). Re-runs with
-``--only`` merge rows by name into the existing files instead of wiping
-them, so partial runs keep the trajectory intact.
+``BENCH_convert.json``, the distributed scaling suite to
+``BENCH_dist.json`` and the HPCG solver suite to ``BENCH_hpcg.json`` in
+``--json-dir`` (default: cwd). Re-runs with ``--only`` merge rows by name
+into the existing files instead of wiping them, so partial runs keep the
+trajectory intact.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only A,B] [--quick]
 """
@@ -28,6 +32,7 @@ import sys
 SPMV_SUITES = ("overhead", "formats", "kernels")
 CONVERT_SUITES = ("convert", "switch")
 DIST_SUITES = ("scaling",)
+HPCG_SUITES = ("hpcg",)
 
 
 def _emit_json(path, rows, meta):
@@ -119,7 +124,8 @@ def main(argv=None):
     args = p.parse_args(argv)
     only = tuple(s for s in args.only.split(",") if s)
 
-    from benchmarks import bench_convert, bench_formats, bench_overhead, bench_scaling
+    from benchmarks import (bench_convert, bench_formats, bench_hpcg,
+                            bench_overhead, bench_scaling)
 
     suites = {
         "overhead": lambda: bench_overhead.run(
@@ -136,6 +142,9 @@ def main(argv=None):
         "scaling": lambda: bench_scaling.run(
             (1, 2, 4, 8), grid=(8, 8, 16), iters=10) if args.quick else
             bench_scaling.run((1, 2, 4, 8)),
+        "hpcg": lambda: bench_hpcg.run(
+            grids=((8, 8, 8),), iters=1) if args.quick else
+            bench_hpcg.run(),
     }
     results = {}
     print("name,us_per_call,derived")
@@ -155,6 +164,7 @@ def main(argv=None):
     spmv_rows = [r for s in SPMV_SUITES for r in results.get(s, ())]
     convert_rows = [r for s in CONVERT_SUITES for r in results.get(s, ())]
     dist_rows = [r for s in DIST_SUITES for r in results.get(s, ())]
+    hpcg_rows = [r for s in HPCG_SUITES for r in results.get(s, ())]
     if spmv_rows:
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_spmv.json"),
                                   spmv_rows, meta))
@@ -164,6 +174,9 @@ def main(argv=None):
     if dist_rows:
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_dist.json"),
                                   dist_rows, meta))
+    if hpcg_rows:
+        print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_hpcg.json"),
+                                  hpcg_rows, meta))
 
     # roofline table pointer (if the dry-run has produced results)
     if not only or "roofline" in only:

@@ -11,6 +11,8 @@ Run (8 simulated devices):
   HPCG_DEVICES=8 PYTHONPATH=src python examples/hpcg_solve.py --mode multiformat
   HPCG_DEVICES=8 PYTHONPATH=src python examples/hpcg_solve.py \
       --mode multiformat --tune cached   # warm cache: zero profiling runs
+  HPCG_DEVICES=8 PYTHONPATH=src python examples/hpcg_solve.py \
+      --precond mg --mode multiformat    # full MG-PCG, per-level DistPlans
   PYTHONPATH=src python examples/hpcg_solve.py --local DIA --remote COO
 """
 import argparse
@@ -49,9 +51,17 @@ def main(argv=None):
                         "compiles natively, jnp reference otherwise")
     p.add_argument("--tol", type=float, default=1e-7)
     p.add_argument("--maxiter", type=int, default=500)
-    p.add_argument("--precond", action="store_true",
-                   help="Jacobi-preconditioned CG (HPCG's GS smoother is "
-                        "vector-hostile; see solvers.pcg)")
+    p.add_argument("--precond", nargs="?", const="jacobi", default="none",
+                   choices=["none", "jacobi", "mg"],
+                   help="preconditioner: 'mg' = geometric multigrid V-cycle "
+                        "with the multicolored SymGS smoother (repro.mg — "
+                        "HPCG's real preconditioner, made vector-parallel "
+                        "by the 8-coloring; per-level slab DistPlans), "
+                        "'jacobi' = diag(A) fallback. Bare --precond keeps "
+                        "the historical Jacobi behaviour.")
+    p.add_argument("--mg-levels", type=int, default=None,
+                   help="cap the MG hierarchy depth (default: coarsen while "
+                        "dims stay even and slabs divide the mesh)")
     args = p.parse_args(argv)
 
     ndev = len(jax.devices())
@@ -68,26 +78,49 @@ def main(argv=None):
     # The z-slab structure of the stencil is known analytically: slab_plan
     # replaces the partition scan, and being correct by construction it can
     # also skip the builder's stale-plan validation (check_plan=False) — the
-    # triplets are then touched exactly once, by the device scatter.
+    # triplets are then touched exactly once, by the device scatter. In mg
+    # mode the whole hierarchy is the optimization product: its level 0 IS
+    # the distributed operator (building it separately would run the
+    # partition + per-shard selection twice).
     t0 = time.perf_counter()
-    plan = hpcg.slab_plan(prob, ndev) if prob.nz % ndev == 0 else None
-    A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
-                          "rows", local_format=Format[args.local],
-                          remote_format=Format[args.remote], mode=args.mode,
-                          tune=args.tune, plan=plan, check_plan=plan is None)
-    print(f"optimization: {A} ({time.perf_counter() - t0:.2f}s)")
-    if args.mode == "multiformat":
-        from repro.core import DEFAULT_CANDIDATES
-        names = [f.name for f in DEFAULT_CANDIDATES]
-        print("  per-shard local formats: ",
-              [names[i] for i in np.asarray(A.local.active_id)])
-        print("  per-shard remote formats:",
-              [names[i] for i in np.asarray(A.remote.active_id)])
+    hier = None
+    if args.precond == "mg":
+        from repro.mg import build_dist_hierarchy
+
+        hier = build_dist_hierarchy(
+            prob, mesh, "rows", nlevels=args.mg_levels, mode=args.mode,
+            tune=args.tune, local_format=Format[args.local],
+            remote_format=Format[args.remote], backend=args.backend)
+        A = hier.levels[0].A
+        print(f"optimization: {hier} ({time.perf_counter() - t0:.2f}s)")
+        if args.mode == "multiformat":
+            for rec in hier.formats():
+                print(f"  level {rec['level']} {rec['dims']}: "
+                      f"local={rec['local']} remote={rec['remote']}")
+    else:
+        plan = hpcg.slab_plan(prob, ndev) if prob.nz % ndev == 0 else None
+        A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
+                              "rows", local_format=Format[args.local],
+                              remote_format=Format[args.remote], mode=args.mode,
+                              tune=args.tune, plan=plan, check_plan=plan is None)
+        print(f"optimization: {A} ({time.perf_counter() - t0:.2f}s)")
+        if args.mode == "multiformat":
+            from repro.core import DEFAULT_CANDIDATES
+            names = [f.name for f in DEFAULT_CANDIDATES]
+            print("  per-shard local formats: ",
+                  [names[i] for i in np.asarray(A.local.active_id)])
+            print("  per-shard remote formats:",
+                  [names[i] for i in np.asarray(A.remote.active_id)])
 
     b = distribute_vector(hpcg.rhs_for_ones(prob), mesh, "rows")
 
     # --- 3. optimized timing -------------------------------------------------
-    if args.precond:
+    if args.precond == "mg":
+        apply_M = hier.apply_M()
+        solve = jax.jit(lambda a, bb: pcg(
+            operator(a, mesh, backend=args.backend), bb, tol=args.tol,
+            maxiter=args.maxiter, apply_M=apply_M))
+    elif args.precond == "jacobi":
         diag = jnp.asarray(
             np.full(prob.shape[0], 26.0, np.float32))  # HPCG diagonal
         solve = jax.jit(lambda a, bb: pcg(

@@ -148,7 +148,7 @@ def _exchange_neighbor(x_blk, hw: int, axis: AxisNames, nshards: int):
 
 
 def _shard_spmv(local, remote, x_blk, hw: int, axis: AxisNames, nshards: int,
-                halo_mode: str, backend: str, remote_empty: bool):
+                halo_mode: str, backend: str, remote_empty: bool, cfg=None):
     """Per-shard SpMV body: y = A_local x_local + A_remote x_halo.
 
     The halo collective is issued *before* the local SpMV: it has no data
@@ -157,18 +157,19 @@ def _shard_spmv(local, remote, x_blk, hw: int, axis: AxisNames, nshards: int,
     overlap). A statically-empty remote part skips both entirely.
     """
     if remote_empty:
-        return _ops.spmv(local, x_blk, backend=backend)
+        return _ops.spmv(local, x_blk, backend=backend, cfg=cfg)
     if halo_mode == "neighbor":
         halo = _exchange_neighbor(x_blk, hw, axis, nshards)
     elif halo_mode == "gather":
         halo = jax.lax.all_gather(x_blk, axis, tiled=True)
     else:
         raise ValueError(halo_mode)
-    y = _ops.spmv(local, x_blk, backend=backend)
-    return y + _ops.spmv(remote, halo, backend=backend)
+    y = _ops.spmv(local, x_blk, backend=backend, cfg=cfg)
+    return y + _ops.spmv(remote, halo, backend=backend, cfg=cfg)
 
 
-def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "auto"):
+def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "auto",
+              cfg=None):
     """Global SpMV. ``x`` is the global vector sharded P(axis).
 
     ``backend="auto"`` flows *into* the shard bodies unresolved: every
@@ -179,14 +180,15 @@ def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "auto"):
     bucket), not one coarse process-wide pick. The routing is a
     trace-time host lookup; inside ``shard_map`` all shards share one
     program, so the decision is identical across shards of the same
-    format branch.
+    format branch. An explicit ``cfg`` (kernel tile-config dict) applies
+    uniformly to every shard's SpMVs instead.
     """
     axis = A.axis
 
     def body(local_s, remote_s, x_blk):
         return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,
                            A.hw, axis, A.nshards, A.halo_mode, backend,
-                           A.remote_empty)
+                           A.remote_empty, cfg=cfg)
 
     fn = compat.shard_map(
         body, mesh=mesh,
@@ -491,7 +493,8 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
                       halo_mode: str = "auto",
                       dtype=jnp.float32,
                       plan: Optional[DistPlan] = None,
-                      check_plan: bool = True) -> DistSparseMatrix:
+                      check_plan: bool = True,
+                      parts: Optional[Tuple[COO, COO]] = None) -> DistSparseMatrix:
     """Build a distributed dynamic matrix (the paper's three versions).
 
     mode='uniform'      local/remote formats fixed (Morpheus & Ghost configs)
@@ -513,6 +516,13 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
     "profile"), a FormatPolicy instance, or the historical alias
     "calibrated" (= profile). At production shard counts use "cached": a
     warm cache selects every shard's format without a single profiling run.
+
+    ``parts`` short-circuits the partition scatter with an already
+    partitioned ``(local, remote)`` stacked-COO pair produced from the
+    *same* plan (e.g. by ``hpcg.partition_problem``) — callers that need
+    the stacked containers anyway (the MG hierarchy builder feeds them to
+    the colored smoother) avoid running the device scatter twice.
+    ``parts`` requires an explicit ``plan``.
     """
     sizes = mesh.shape
     names = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -539,13 +549,23 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
                                            local_plans=None,
                                            remote_plans=None,
                                            pattern_sig=None)
-    # strip the format plans / fingerprint for the partition jit key: a plan
-    # enriched by plan_dist_formats must hit the same partition_execute trace
-    part_plan = dataclasses.replace(plan, candidates=None, local_plans=None,
-                                    remote_plans=None, pattern_sig=None)
-    lcoos, rcoos = partition_execute_jit(np.asarray(row), np.asarray(col),
-                                         np.asarray(val), plan=part_plan,
-                                         dtype=dtype)
+    if parts is not None:
+        lcoos, rcoos = parts
+        if (lcoos.shape != plan.local_shape
+                or rcoos.shape != plan.remote_shape):
+            raise ValueError(
+                f"parts shapes {lcoos.shape}/{rcoos.shape} do not match the "
+                f"plan's {plan.local_shape}/{plan.remote_shape}")
+    else:
+        # strip the format plans / fingerprint for the partition jit key: a
+        # plan enriched by plan_dist_formats must hit the same
+        # partition_execute trace
+        part_plan = dataclasses.replace(plan, candidates=None,
+                                        local_plans=None, remote_plans=None,
+                                        pattern_sig=None)
+        lcoos, rcoos = partition_execute_jit(np.asarray(row), np.asarray(col),
+                                             np.asarray(val), plan=part_plan,
+                                             dtype=dtype)
 
     if mode == "uniform":
         local = convert_execute_batch(

@@ -1,7 +1,9 @@
 """Iterative solvers over (dynamic, possibly distributed) sparse matrices.
 
-CG is the paper's workload (HPCG with the preconditioner disabled, §IV-B).
-The solver is generic over an ``apply_A`` closure so the same loop runs:
+CG is the paper's workload (HPCG — benchmarked there with the
+preconditioner disabled, §IV-B; ``pcg(apply_M=...)`` restores it via the
+``repro.mg`` multigrid V-cycle with the colored SymGS smoother). The
+solvers are generic over an ``apply_A`` closure so the same loop runs:
   * single device, any concrete/dynamic format       (paper Fig. 4)
   * distributed local/remote split across a mesh     (paper Fig. 5)
 Vector algebra goes through repro.core.ops (dot/waxpby/axpy/norm2), the
@@ -24,7 +26,7 @@ class CGResult(NamedTuple):
     resnorm: jax.Array  # final ||r||_2
 
 
-def operator(A, mesh=None, backend: str = "auto") -> Callable:
+def operator(A, mesh=None, backend: str = "auto", cfg=None) -> Callable:
     """``apply_A`` closure for the solvers, over any matrix flavour.
 
     Accepts a concrete container, a (Switch)DynamicMatrix, or a
@@ -34,87 +36,103 @@ def operator(A, mesh=None, backend: str = "auto") -> Callable:
     (``repro.core.ops.kernel_route``): the Pallas kernels take the hot
     path exactly where a tuned tile config beat the reference path, so a
     distributed HPCG CG inherits tuned kernels on each shard by default.
+    ``cfg`` pins an explicit kernel tile config instead (dict, forwarded
+    to every SpMV the closure issues; None keeps the tuned/heuristic
+    resolution per shard and format).
     """
     from repro.core.distributed import DistSparseMatrix, dist_spmv
 
     if isinstance(A, DistSparseMatrix):
         if mesh is None:
             raise ValueError("operator(DistSparseMatrix) requires mesh=")
-        return lambda v: dist_spmv(A, v, mesh, backend=backend)
-    return lambda v: _ops.spmv(A, v, backend=backend)
+        return lambda v: dist_spmv(A, v, mesh, backend=backend, cfg=cfg)
+    return lambda v: _ops.spmv(A, v, backend=backend, cfg=cfg)
+
+
+def _cg_step(apply_A: Callable, state):
+    """One CG iteration (shared by :func:`cg` and :func:`cg_fixed_iters`):
+    (x, r, p, rs) -> (x, r, p, rs). All reductions are global (XLA emits
+    the cross-shard all-reduce when the vectors are sharded)."""
+    x, r, p, rs = state
+    Ap = apply_A(p)
+    alpha = rs / jnp.maximum(_ops.dot(p, Ap), 1e-30)
+    x = _ops.axpy(alpha, p, x)
+    r = _ops.axpy(-alpha, Ap, r)
+    rs_new = _ops.dot(r, r)
+    beta = rs_new / jnp.maximum(rs, 1e-30)
+    p = _ops.waxpby(1.0, r, beta, p)
+    return x, r, p, rs_new
 
 
 def cg(apply_A: Callable, b: jax.Array, x0: Optional[jax.Array] = None,
        tol: float = 1e-8, maxiter: int = 100) -> CGResult:
     """Unpreconditioned conjugate gradients (HPCG's optimized-phase solve).
 
-    Runs a fixed-shape lax.while_loop; all reductions are global (XLA emits
-    the cross-shard all-reduce when b is sharded).
+    Runs a fixed-shape lax.while_loop over the shared :func:`_cg_step`.
     """
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - apply_A(x0)
-    p0 = r0
     rs0 = _ops.dot(r0, r0)
     tol2 = jnp.asarray(tol, b.dtype) ** 2 * jnp.maximum(rs0, 1e-30)
 
     def cond(state):
-        _, _, _, rs, k = state
+        (_, _, _, rs), k = state
         return (rs > tol2) & (k < maxiter)
 
     def body(state):
-        x, r, p, rs, k = state
-        Ap = apply_A(p)
-        alpha = rs / jnp.maximum(_ops.dot(p, Ap), 1e-30)
-        x = _ops.axpy(alpha, p, x)
-        r = _ops.axpy(-alpha, Ap, r)
-        rs_new = _ops.dot(r, r)
-        beta = rs_new / jnp.maximum(rs, 1e-30)
-        p = _ops.waxpby(1.0, r, beta, p)
-        return x, r, p, rs_new, k + 1
+        s, k = state
+        return _cg_step(apply_A, s), k + 1
 
-    x, r, p, rs, k = jax.lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
+    (x, r, p, rs), k = jax.lax.while_loop(cond, body,
+                                          ((x0, r0, r0, rs0), 0))
     return CGResult(x, k, jnp.sqrt(rs))
 
 
 def cg_fixed_iters(apply_A: Callable, b: jax.Array,
                    x0: Optional[jax.Array] = None, iters: int = 50) -> CGResult:
     """Fixed-iteration CG (benchmark timing variant: no early exit, the
-    HPCG 'optimized problem timing' loop shape)."""
+    HPCG 'optimized problem timing' loop shape). Same :func:`_cg_step`
+    body as :func:`cg`, under ``lax.scan``."""
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - apply_A(x0)
     rs0 = _ops.dot(r0, r0)
 
     def body(state, _):
-        x, r, p, rs = state
-        Ap = apply_A(p)
-        alpha = rs / jnp.maximum(_ops.dot(p, Ap), 1e-30)
-        x = _ops.axpy(alpha, p, x)
-        r = _ops.axpy(-alpha, Ap, r)
-        rs_new = _ops.dot(r, r)
-        beta = rs_new / jnp.maximum(rs, 1e-30)
-        p = _ops.waxpby(1.0, r, beta, p)
-        return (x, r, p, rs_new), None
+        return _cg_step(apply_A, state), None
 
     (x, r, _, rs), _ = jax.lax.scan(body, (x0, r0, r0, rs0), None, length=iters)
     return CGResult(x, jnp.asarray(iters), jnp.sqrt(rs))
 
 
-def pcg(apply_A: Callable, b: jax.Array, diag_A: jax.Array,
+def pcg(apply_A: Callable, b: jax.Array,
+        diag_A: Optional[jax.Array] = None,
         x0: Optional[jax.Array] = None, tol: float = 1e-8,
-        maxiter: int = 100) -> CGResult:
-    """Jacobi-preconditioned CG.
+        maxiter: int = 100, *, apply_M: Optional[Callable] = None) -> CGResult:
+    """Preconditioned CG, generic over the preconditioner ``z = M^{-1} r``.
 
-    HPCG's reference preconditioner is a symmetric Gauss-Seidel sweep whose
-    triangular solves are inherently sequential — hostile to every vector
-    architecture (the paper disables preconditioning for the same reason,
-    §IV-B). Jacobi (M = diag(A)) is the standard vector-friendly stand-in:
-    one elementwise multiply, same convergence class on the HPCG operator.
-    ``diag_A`` comes from extract_diagonal() on any (dynamic) format.
+    ``apply_M`` is any symmetric-positive-definite linear map — in
+    particular ``repro.mg.MGHierarchy.apply_M()``, the multigrid V-cycle
+    with the multicolored symmetric Gauss-Seidel smoother
+    (``repro.mg.smoothers``). The coloring makes HPCG's reference SymGS
+    sweep vector-parallel (per-color row-block SpMVs), so the
+    preconditioner the paper had to disable (§IV-B: sequential triangular
+    sweeps) runs on the same dynamic-format SpMV machinery as the
+    operator itself.
+
+    Without ``apply_M``, ``diag_A`` (from extract_diagonal() on any
+    dynamic format) selects the classic Jacobi preconditioner
+    M = diag(A) — the cheap fallback for operators with no usable
+    coloring.
     """
-    minv = jnp.where(jnp.abs(diag_A) > 1e-30, 1.0 / diag_A, 0.0)
+    if apply_M is None:
+        if diag_A is None:
+            raise ValueError("pcg needs apply_M= (e.g. an MG V-cycle) or "
+                             "diag_A= (Jacobi)")
+        minv = jnp.where(jnp.abs(diag_A) > 1e-30, 1.0 / diag_A, 0.0)
+        apply_M = lambda r: minv * r  # noqa: E731
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - apply_A(x0)
-    z0 = minv * r0
+    z0 = apply_M(r0)
     p0 = z0
     rz0 = _ops.dot(r0, z0)
     rr0 = _ops.dot(r0, r0)
@@ -134,7 +152,7 @@ def pcg(apply_A: Callable, b: jax.Array, diag_A: jax.Array,
         alpha = rz / jnp.maximum(_ops.dot(p, Ap), 1e-30)
         x = _ops.axpy(alpha, p, x)
         r = _ops.axpy(-alpha, Ap, r)
-        z = minv * r
+        z = apply_M(r)
         rz_new = _ops.dot(r, z)
         rr_new = _ops.dot(r, r)
         beta = rz_new / jnp.maximum(rz, 1e-30)

@@ -1,0 +1,35 @@
+"""repro.mg — geometric multigrid over dynamic sparse matrices.
+
+The preconditioner the paper's HPCG port leaves on the table (§IV-B
+benchmarks with preconditioning disabled because reference SymGS is
+sequential): a V-cycle of 2:1-coarsened stencil levels, smoothed by a
+multicolored (vector-parallel) symmetric Gauss-Seidel, with every level —
+an independent sparsity pattern — routed through the runtime
+format-selection machinery.
+
+    coarsen    plan/execute 2:1 grid coarsening (injection / trilinear,
+               rediscretized / Galerkin coarse operators)
+    smoothers  8-color SymGS as per-color row-block SpMVs + Jacobi fallback
+    cycle      MGHierarchy + jit-able V-cycle apply_M for solvers.pcg
+    dist       per-level slab-partitioned hierarchy (DistPlan per level)
+"""
+from repro.mg.coarsen import (CoarsenPlan, Coarsening, coarsen_execute,
+                              f2c_map, galerkin_coarse, plan_coarsen,
+                              prolong, restrict, stencil27_coo,
+                              trilinear_corners)
+from repro.mg.cycle import MGHierarchy, MGLevel, build_hierarchy, v_cycle
+from repro.mg.dist import (DistMGHierarchy, DistMGLevel,
+                           build_dist_hierarchy, v_cycle_dist)
+from repro.mg.smoothers import (ColoredSystem, build_colored, check_coloring,
+                                color_grid, gs_sweep, jacobi, symgs,
+                                symgs_reference_np)
+
+__all__ = [
+    "CoarsenPlan", "Coarsening", "plan_coarsen", "coarsen_execute",
+    "f2c_map", "trilinear_corners", "stencil27_coo", "galerkin_coarse",
+    "restrict", "prolong",
+    "ColoredSystem", "color_grid", "build_colored", "check_coloring",
+    "gs_sweep", "symgs", "jacobi", "symgs_reference_np",
+    "MGHierarchy", "MGLevel", "build_hierarchy", "v_cycle",
+    "DistMGHierarchy", "DistMGLevel", "build_dist_hierarchy", "v_cycle_dist",
+]

@@ -1,0 +1,306 @@
+"""Geometric 2:1 coarsening of the HPCG grid hierarchy (plan/execute).
+
+The multigrid analogue of ``core.convert``'s symbolic/numeric split:
+
+  * :func:`plan_coarsen` (symbolic) is pure integer arithmetic over the
+    grid dimensions — no device work, no data. It emits a
+    :class:`CoarsenPlan` of static python ints/strings, hashable so the
+    numeric phase rides through ``jax.jit`` as a static argument.
+  * :func:`coarsen_execute` (numeric) materialises the level-transfer
+    machinery **on device**: the injection map ``f2c`` (coarse point i ->
+    fine grid index), the trilinear-prolongation corner tables, and (for
+    the default rediscretized coarse operator) the 27-point-stencil COO
+    triplets of the coarse grid — all from ``jnp.arange`` index
+    arithmetic, fully jit-able, zero device->host transfers.
+
+Transfer operators (paper HPCG §3.3 conventions):
+
+  * restriction: **injection** (``rc[i] = rf[f2c[i]]``, HPCG's choice)
+    paired with injection prolongation, or **full weighting**
+    (``R = P^T / 8``) paired with trilinear prolongation — both pairings
+    keep ``P = c R^T`` so the V-cycle preconditioner stays symmetric.
+  * coarse operator: **rediscretize** (the 27-point stencil regenerated on
+    the coarse grid — HPCG's choice, device-resident here) or **galerkin**
+    (``Ac = R Af P``, a host triple product via padded-neighbour joins;
+    setup-phase only, kept as the algebraic cross-check).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import COO
+from repro.core.hpcg import HPCGProblem
+
+PROLONG_MODES = ("injection", "trilinear")
+COARSE_OPS = ("rediscretize", "galerkin")
+
+
+@dataclasses.dataclass(frozen=True)
+class CoarsenPlan:
+    """Static metadata of one 2:1 coarsening step (hashable, jit-static).
+
+    ``fine``/``coarse`` are the grid dims; ``prolong`` fixes the transfer
+    pair (injection/injection or trilinear/full-weighting); ``coarse_op``
+    picks how the coarse operator is built.
+    """
+
+    fine: Tuple[int, int, int]
+    coarse: Tuple[int, int, int]
+    prolong: str = "injection"
+    coarse_op: str = "rediscretize"
+
+    @property
+    def nf(self) -> int:
+        return int(np.prod(self.fine))
+
+    @property
+    def nc(self) -> int:
+        return int(np.prod(self.coarse))
+
+
+def plan_coarsen(nx: int, ny: int, nz: int, prolong: str = "injection",
+                 coarse_op: str = "rediscretize") -> CoarsenPlan:
+    """Symbolic phase: validate the 2:1 step and fix its static metadata."""
+    if prolong not in PROLONG_MODES:
+        raise ValueError(f"prolong {prolong!r} not in {PROLONG_MODES}")
+    if coarse_op not in COARSE_OPS:
+        raise ValueError(f"coarse_op {coarse_op!r} not in {COARSE_OPS}")
+    if coarse_op == "galerkin" and prolong == "injection":
+        # R A P with injection R/P just samples A at the even points: for a
+        # reach-1 stencil every sampled off-diagonal vanishes and Ac
+        # degenerates to a diagonal — pair galerkin with trilinear instead.
+        raise ValueError("coarse_op='galerkin' requires prolong='trilinear' "
+                         "(injection Galerkin degenerates to diag sampling)")
+    for d in (nx, ny, nz):
+        if d < 2 or d % 2:
+            raise ValueError(
+                f"2:1 coarsening needs even dims >= 2, got {(nx, ny, nz)}")
+    return CoarsenPlan((nx, ny, nz), (nx // 2, ny // 2, nz // 2),
+                       prolong=prolong, coarse_op=coarse_op)
+
+
+# ---------------------------------------------------------------------------
+# Device index arithmetic (all jit-able; grid ordering is x-fastest,
+# idx = x + nx*(y + ny*z), matching core.hpcg.generate_problem)
+# ---------------------------------------------------------------------------
+
+
+def _grid_xyz(n: int, nx: int, ny: int):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    return idx % nx, (idx // nx) % ny, idx // (nx * ny)
+
+
+def f2c_map(plan: CoarsenPlan) -> jax.Array:
+    """(nc,) fine-grid index of every coarse point (fine = 2 * coarse)."""
+    nxc, nyc, _ = plan.coarse
+    nxf, nyf, _ = plan.fine
+    xc, yc, zc = _grid_xyz(plan.nc, nxc, nyc)
+    return 2 * xc + nxf * (2 * yc + nyf * 2 * zc)
+
+
+def trilinear_corners(plan: CoarsenPlan) -> Tuple[jax.Array, jax.Array]:
+    """Per-fine-point coarse interpolation corners.
+
+    Returns ``(cols, wts)`` of shape ``(nf, 8)``: the up-to-8 coarse
+    points each fine point interpolates from and their trilinear weights
+    (1 per even coordinate, 1/2 per odd-coordinate neighbour pair). Corners
+    falling outside the coarse grid (the odd top boundary) carry weight 0
+    and a column id of ``nc`` — the scatter-drop / masked-gather sentinel.
+    """
+    nxf, nyf, _ = plan.fine
+    nxc, nyc, nzc = plan.coarse
+    xf, yf, zf = _grid_xyz(plan.nf, nxf, nyf)
+    cols, wts = [], []
+    for dz in (0, 1):
+        for dy in (0, 1):
+            for dx in (0, 1):
+                xc, yc, zc = xf // 2 + dx, yf // 2 + dy, zf // 2 + dz
+                # weight per axis: even coord -> only the d=0 corner (w=1);
+                # odd coord -> both corners at w=1/2 each
+                w = jnp.ones((plan.nf,), jnp.float32)
+                dup = jnp.zeros((plan.nf,), bool)
+                for coord, d in ((xf, dx), (yf, dy), (zf, dz)):
+                    odd = (coord % 2) == 1
+                    w = w * jnp.where(odd, 0.5, 1.0)
+                    dup = dup | (~odd & (d == 1))  # even coord has no d=1 corner
+                ok = (~dup) & (xc < nxc) & (yc < nyc) & (zc < nzc)
+                cid = xc + nxc * (yc + nyc * zc)
+                cols.append(jnp.where(ok, cid, plan.nc))
+                wts.append(jnp.where(ok, w, 0.0))
+    return jnp.stack(cols, axis=1), jnp.stack(wts, axis=1)
+
+
+def stencil27_coo(nx: int, ny: int, nz: int, dtype=jnp.float32) -> COO:
+    """The HPCG 27-point stencil (diag 26, off-diag -1) as device COO.
+
+    jit-able twin of ``core.hpcg.generate_problem``: capacity ``27*n`` with
+    out-of-grid neighbours stored as inert padding (row kept, val 0) so the
+    shape is static for any grid.
+    """
+    n = nx * ny * nz
+    x, y, z = _grid_xyz(n, nx, ny)
+    rows, cols, vals = [], [], []
+    for dz in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                xp, yp, zp = x + dx, y + dy, z + dz
+                ok = ((xp >= 0) & (xp < nx) & (yp >= 0) & (yp < ny)
+                      & (zp >= 0) & (zp < nz))
+                c = xp + nx * (yp + ny * zp)
+                v = jnp.where(dx == 0 and dy == 0 and dz == 0, 26.0, -1.0)
+                rows.append(x + nx * (y + ny * z))
+                cols.append(jnp.where(ok, c, 0).astype(jnp.int32))
+                vals.append(jnp.where(ok, v, 0.0).astype(dtype))
+    row = jnp.concatenate(rows).astype(jnp.int32)
+    col = jnp.concatenate(cols)
+    val = jnp.concatenate(vals)
+    return COO(row, col, val, (n, n), 27 * n)
+
+
+# ---------------------------------------------------------------------------
+# The numeric phase: Coarsening (device-resident level-transfer machinery)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Coarsening:
+    """Device artifacts of one coarsening step (output of
+    :func:`coarsen_execute`). ``tri_cols``/``tri_wts`` are only populated
+    for trilinear plans; ``Ac`` only when the plan's coarse operator is
+    device-buildable (rediscretize)."""
+
+    plan: CoarsenPlan
+    f2c: jax.Array                       # (nc,) injection map
+    tri_cols: Optional[jax.Array] = None  # (nf, 8) coarse corner ids
+    tri_wts: Optional[jax.Array] = None   # (nf, 8) trilinear weights
+    Ac: Optional[COO] = None              # coarse operator (rediscretized)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _coarsen_execute_jit(plan: CoarsenPlan, dummy=None):
+    f2c = f2c_map(plan)
+    tc = tw = None
+    if plan.prolong == "trilinear":
+        tc, tw = trilinear_corners(plan)
+    Ac = None
+    if plan.coarse_op == "rediscretize":
+        Ac = stencil27_coo(*plan.coarse)
+    return f2c, tc, tw, Ac
+
+
+def coarsen_execute(plan: CoarsenPlan, Af: Optional[COO] = None) -> Coarsening:
+    """Numeric phase: build the level-transfer artifacts for ``plan``.
+
+    Device-resident and jit-compiled (one trace per plan) for the
+    injection/trilinear maps and the rediscretized coarse stencil. A
+    ``galerkin`` plan additionally needs the fine operator ``Af`` and runs
+    the host triple product (:func:`galerkin_coarse`) — setup-phase only.
+    """
+    f2c, tc, tw, Ac = _coarsen_execute_jit(plan)
+    if plan.coarse_op == "galerkin":
+        if Af is None:
+            raise ValueError("coarse_op='galerkin' needs the fine operator "
+                             "Af (host triple product)")
+        Ac = galerkin_coarse(Af, plan)
+    return Coarsening(plan, f2c, tri_cols=tc, tri_wts=tw, Ac=Ac)
+
+
+def restrict(c: Coarsening, rf: jax.Array) -> jax.Array:
+    """rc = R rf: injection gather, or full weighting ``P^T rf / 8`` for
+    trilinear plans (scatter-add over the corner tables; the ``nc``
+    sentinel columns drop)."""
+    if c.plan.prolong == "injection":
+        return jnp.take(rf, c.f2c, mode="clip")
+    contrib = (c.tri_wts * rf[:, None]).reshape(-1)
+    return jnp.zeros((c.plan.nc,), rf.dtype).at[
+        c.tri_cols.reshape(-1)].add(contrib) / 8.0
+
+
+def prolong(c: Coarsening, xc: jax.Array) -> jax.Array:
+    """xf = P xc: injection scatter (zeros elsewhere), or trilinear
+    interpolation over the corner tables."""
+    if c.plan.prolong == "injection":
+        return jnp.zeros((c.plan.nf,), xc.dtype).at[c.f2c].set(xc)
+    gathered = jnp.take(xc, jnp.clip(c.tri_cols, 0, c.plan.nc - 1),
+                        mode="clip")
+    return jnp.sum(c.tri_wts * gathered, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Galerkin triple product (host; the algebraic cross-check of rediscretize)
+# ---------------------------------------------------------------------------
+
+
+def _coalesce(r, c, v):
+    order = np.lexsort((c, r))
+    r, c, v = r[order], c[order], v[order]
+    first = np.ones(len(r), bool)
+    first[1:] = (r[1:] != r[:-1]) | (c[1:] != c[:-1])
+    idx = np.cumsum(first) - 1
+    out = np.zeros(int(first.sum()), v.dtype)
+    np.add.at(out, idx, v)
+    return r[first], c[first], out
+
+
+def _p_padded(plan: CoarsenPlan):
+    """Host (nf, 8) padded form of the prolongation P (cols=-1 padding)."""
+    if plan.prolong == "injection":
+        cols = np.full((plan.nf, 1), -1, np.int64)
+        wts = np.zeros((plan.nf, 1))
+        f2c = np.asarray(f2c_map(plan))
+        cols[f2c, 0] = np.arange(plan.nc)
+        wts[f2c, 0] = 1.0
+        return cols, wts
+    tc_d, tw_d = trilinear_corners(plan)
+    tc = np.asarray(tc_d).astype(np.int64)
+    tw = np.asarray(tw_d).astype(np.float64)
+    return np.where(tw > 0, tc, -1), tw
+
+
+def galerkin_coarse(Af: COO, plan: CoarsenPlan, dtype=jnp.float32) -> COO:
+    """Ac = R Af P on host via two padded-neighbour joins.
+
+    ``R`` is the adjoint pairing of the plan's prolongation (``P^T`` for
+    injection, ``P^T / 8`` full weighting for trilinear), so ``Ac`` is
+    symmetric whenever ``Af`` is. O(nnz(Af) * 8^2) intermediate entries —
+    a setup-phase cost, matching the symbolic phase's transfer class.
+    """
+    pc, pw = _p_padded(plan)
+    k = pc.shape[1]
+    ar = np.asarray(Af.row, np.int64)
+    ac = np.asarray(Af.col, np.int64)
+    av = np.asarray(Af.data, np.float64)
+    live = av != 0
+    ar, ac, av = ar[live], ac[live], av[live]
+    # join 1: (A P)[i, kc] = sum_j A[i, j] P[j, kc]
+    jr = np.repeat(ar, k)
+    jc = pc[ac].reshape(-1)
+    jv = (av[:, None] * pw[ac]).reshape(-1)
+    ok = jc >= 0
+    jr, jc, jv = _coalesce(jr[ok], jc[ok], jv[ok])
+    # join 2: Ac[kr, kc] = sum_i P[i, kr] (A P)[i, kc]   (R = P^T [/8])
+    gr = pc[jr].reshape(-1)
+    gc = np.repeat(jc, k)
+    gv = (pw[jr] * jv[:, None]).reshape(-1)
+    ok = gr >= 0
+    gr, gc, gv = _coalesce(gr[ok], gc[ok], gv[ok])
+    if plan.prolong == "trilinear":
+        gv = gv / 8.0
+    return COO(jnp.asarray(gr, jnp.int32), jnp.asarray(gc, jnp.int32),
+               jnp.asarray(gv.astype(np.dtype(dtype))), (plan.nc, plan.nc),
+               len(gv))
+
+
+def coarse_problem(prob: HPCGProblem) -> HPCGProblem:
+    """Rediscretized coarse :class:`HPCGProblem` (host twin of
+    :func:`stencil27_coo`, used by the distributed per-level builder)."""
+    from repro.core.hpcg import generate_problem
+
+    plan = plan_coarsen(prob.nx, prob.ny, prob.nz)
+    return generate_problem(*plan.coarse)

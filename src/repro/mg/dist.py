@@ -1,0 +1,350 @@
+"""Distributed MG-PCG: per-level slab partitions over the same mesh.
+
+Every level of the geometric hierarchy is an independent HPCG stencil
+system, so every level gets its own analytic
+:class:`~repro.core.distributed.DistPlan` from ``hpcg.slab_plan`` (z-slab
+partition, correct by construction -> ``check_plan=False``, triplets
+touched once by the device scatter) and its own
+:func:`~repro.core.distributed.build_dist_matrix` — including
+``mode="multiformat"``, where the tuning policy picks each level's
+per-shard local/remote formats exactly as for the top-level operator.
+
+The smoother is the standard distributed adaptation of HPCG's SymGS:
+halo values are exchanged once per sweep and *frozen* during it (hybrid
+block-Jacobi across shards, colored symmetric Gauss-Seidel within each
+shard's local block). Folding the frozen halo term into the right-hand
+side (``b_eff = b - A_remote x_halo``) reduces the per-shard work to the
+single-device colored sweep over the local block — the same
+``(NCOLORS, cap)`` stacked split, built here with one vmapped device
+scatter over the shard axis. Grid transfers are injection and z-slabs
+align across levels (fine z = 2 * coarse z lands in the same shard), so
+restriction/prolongation are shard-local gathers/scatters — no collective.
+
+A V-cycle therefore issues collectives only where the operator itself
+does: the per-sweep halo exchange and the residual's overlapped
+``dist_spmv``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core import compat
+from repro.core import ops as _ops
+from repro.core.compat import leading_axis_spec
+from repro.core.convert import (_planned_pull, convert_execute_batch,
+                                plan_switch_batch)
+from repro.core.distributed import (DistSparseMatrix, _exchange_neighbor,
+                                    _part_spec, _unstack, build_dist_matrix,
+                                    dist_spmv)
+from repro.core.dynamic import DEFAULT_CANDIDATES, SwitchDynamicMatrix
+from repro.core.formats import COO, Format
+from repro.core.hpcg import HPCGProblem, generate_problem, partition_problem
+from repro.mg.cycle import MIN_COARSE_ROWS
+from repro.mg.smoothers import (NCOLORS, _split_colors_device, color_grid,
+                                color_ranks, color_rows_padded)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistColoredSystem:
+    """Stacked per-shard color split of the local blocks.
+
+    ``blocks[c]`` is a stacked ``(P, ...)`` container of shape
+    ``(rmax, mp)`` (every shard's slab has identical geometry, so the
+    color structure — ``rows``, ranks, counts — is shared host metadata);
+    ``diag`` is the stacked ``(P, mp)`` local diagonal.
+    """
+
+    blocks: Tuple
+    rows: Tuple[np.ndarray, ...]
+    diag: jax.Array
+
+    @property
+    def formats(self):
+        out = []
+        for b in self.blocks:
+            out.append([f.name for f in b.candidates]
+                       if isinstance(b, SwitchDynamicMatrix)
+                       else Format(b.format).name)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DistMGLevel:
+    A: DistSparseMatrix
+    colored: DistColoredSystem
+    f2c_local: Optional[np.ndarray]     # (mp_coarse,) — None on coarsest
+    dims: Tuple[int, int, int]
+    slab_dims: Tuple[int, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistMGHierarchy:
+    levels: Tuple[DistMGLevel, ...]
+    mesh: Mesh
+    pre: int = 1
+    post: int = 1
+    coarse_sweeps: int = 4
+    backend: str = "auto"
+
+    @property
+    def nlevels(self) -> int:
+        return len(self.levels)
+
+    def apply_M(self) -> Callable:
+        return lambda r: v_cycle_dist(self, r)
+
+    def formats(self):
+        """Per-level distributed selection summary (A's per-shard active
+        ids in multiformat mode + smoother block formats)."""
+        out = []
+        for i, lev in enumerate(self.levels):
+            rec = {"level": i, "dims": lev.dims,
+                   "colors": lev.colored.formats}
+            for part in ("local", "remote"):
+                t = getattr(lev.A, part)
+                if isinstance(t, SwitchDynamicMatrix):
+                    names = [f.name for f in t.candidates]
+                    ids = np.asarray(t.active_id)
+                    rec[part] = [names[j] for j in ids]
+                else:
+                    rec[part] = Format(t.format).name
+            out.append(rec)
+        return out
+
+    def __repr__(self):
+        dims = " > ".join("x".join(map(str, lev.dims)) for lev in self.levels)
+        return (f"DistMGHierarchy({dims}; P={self.levels[0].A.nshards}, "
+                f"pre={self.pre}, post={self.post})")
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+
+
+def _shard_put(t, mesh: Mesh, axis):
+    with jax.transfer_guard("allow"):
+        return jax.tree.map(
+            lambda a: jax.device_put(
+                a, NamedSharding(mesh, leading_axis_spec(axis, a.ndim))), t)
+
+
+def _diag_batched(local: COO) -> jax.Array:
+    """(P, mp) local-block diagonal in one vmapped device pass."""
+    mp = local.shape[0]
+
+    def one(row, col, data):
+        on = row == col
+        return jax.ops.segment_sum(jnp.where(on, data, 0), row,
+                                   num_segments=mp)
+
+    return jax.vmap(one)(local.row, local.col, local.data)
+
+
+def _build_dist_colored(local: COO, slab_dims, mesh: Mesh, axis,
+                        fmt: Format = Format.CSR,
+                        policy=None,
+                        candidates: Sequence[Format] = DEFAULT_CANDIDATES
+                        ) -> DistColoredSystem:
+    """Color-split every shard's local block in one vmapped device scatter.
+
+    With a ``FormatPolicy``, each color's stacked shard batch goes through
+    ``select_batch`` and becomes a stacked ``SwitchDynamicMatrix`` with
+    per-shard active ids (the Multi-Format smoother); otherwise every
+    block converts uniformly to ``fmt`` via the batched plan/execute.
+    """
+    mp = local.shape[0]
+    colors = color_grid(*slab_dims)
+    counts = np.bincount(colors, minlength=NCOLORS)
+    rmax = max(1, int(counts.max()))
+    colors_d = jnp.asarray(colors)
+    rank_d = jnp.asarray(color_ranks(colors))
+
+    # shared per-color capacity: one vmapped count + one planned pull
+    def _counts(row, data):
+        key = jnp.where(data != 0, colors_d[row], NCOLORS)
+        return jnp.bincount(key, length=NCOLORS + 1)[:NCOLORS]
+
+    cap = max(1, int(_planned_pull(jnp.max(jax.vmap(_counts)(
+        local.row, local.data)))))
+
+    split = jax.vmap(
+        lambda r, c, v: _split_colors_device(r, c, v, colors_d, rank_d, cap))
+    rr, cc, vv = split(local.row, local.col, local.data)  # (P, NCOLORS, cap)
+
+    blocks = []
+    for c in range(NCOLORS):
+        Cc = COO(rr[:, c], cc[:, c], vv[:, c], (rmax, mp), cap)
+        if policy is not None:
+            ids = policy.select_batch(Cc)
+            blk = SwitchDynamicMatrix.build_batched(
+                Cc, candidates=tuple(policy.candidates), active_ids=ids)
+        else:
+            blk = convert_execute_batch(Cc, plan_switch_batch(Cc, Format(fmt)))
+        blocks.append(_shard_put(blk, mesh, axis))
+    rows_np = color_rows_padded(colors, mp, rmax)
+    rows = tuple(rows_np[c] for c in range(NCOLORS))
+    diag = _shard_put(_diag_batched(local), mesh, axis)
+    return DistColoredSystem(tuple(blocks), rows, diag)
+
+
+def build_dist_hierarchy(prob: HPCGProblem, mesh: Mesh, axis,
+                         nlevels: Optional[int] = None,
+                         mode: str = "uniform",
+                         tune="cached",
+                         local_format: Format = Format.DIA,
+                         remote_format: Format = Format.COO,
+                         candidates: Sequence[Format] = DEFAULT_CANDIDATES,
+                         smoother_format: Format = Format.CSR,
+                         smoother_policy=None,
+                         pre: int = 1, post: int = 1, coarse_sweeps: int = 4,
+                         backend: str = "auto",
+                         dtype=jnp.float32) -> DistMGHierarchy:
+    """Per-level slab-partitioned hierarchy on ``mesh``.
+
+    Coarsening continues while the grid dims stay even, the coarse slab
+    height divides the shard count (``(nz/2) % P == 0`` — each level's
+    ``hpcg.slab_plan`` must exist) and the level keeps at least
+    ``MIN_COARSE_ROWS`` rows. ``mode``/``tune``/``*_format`` flow into
+    every level's ``build_dist_matrix``; ``smoother_policy`` upgrades the
+    colored smoother blocks to per-(shard, color) Multi-Format selection.
+    """
+    sizes = mesh.shape
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    nshards = int(np.prod([sizes[a] for a in names]))
+
+    dims = (prob.nx, prob.ny, prob.nz)
+    if prob.nz % nshards:
+        raise ValueError(f"nz={prob.nz} not divisible by P={nshards}")
+    levels = []
+    prob_l = prob
+    while True:
+        nx, ny, nz = dims
+        last = ((nlevels is not None and len(levels) + 1 >= nlevels)
+                or any(d % 2 for d in dims)
+                or (nz // 2) % nshards
+                or (nx * ny * nz) // 8 < MIN_COARSE_ROWS)
+        # one device scatter per level: the stacked (local, remote) parts
+        # feed both the matrix builder (parts=) and the colored smoother
+        local, remote, plan = partition_problem(prob_l, nshards, dtype=dtype)
+        A = build_dist_matrix(prob_l.row, prob_l.col, prob_l.val,
+                              prob_l.shape, mesh, axis,
+                              local_format=local_format,
+                              remote_format=remote_format, mode=mode,
+                              tune=tune, candidates=candidates,
+                              plan=plan, check_plan=False, dtype=dtype,
+                              parts=(local, remote))
+        slab_dims = (nx, ny, nz // nshards)
+        colored = _build_dist_colored(local, slab_dims, mesh, axis,
+                                      fmt=smoother_format,
+                                      policy=smoother_policy,
+                                      candidates=candidates)
+        f2c_local = None
+        if not last:
+            # coarse slab -> fine slab injection map (shard-local: fine
+            # z = 2 * coarse z stays inside the same z-slab)
+            from repro.mg.coarsen import f2c_map, plan_coarsen
+
+            cplan = plan_coarsen(nx, ny, nz // nshards)
+            f2c_local = np.asarray(f2c_map(cplan))
+        levels.append(DistMGLevel(A, colored, f2c_local, dims, slab_dims))
+        if last:
+            break
+        dims = (nx // 2, ny // 2, nz // 2)
+        prob_l = generate_problem(*dims)
+    return DistMGHierarchy(tuple(levels), mesh, pre=pre, post=post,
+                           coarse_sweeps=coarse_sweeps, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# The distributed V-cycle
+# ---------------------------------------------------------------------------
+
+
+def _dist_smooth(hier: DistMGHierarchy, lev: DistMGLevel, b, x,
+                 sweeps: int, x_is_zero: bool):
+    """``sweeps`` distributed SymGS sweeps: per sweep, one halo exchange
+    (skipped when ``x`` is statically zero — the halo term vanishes) then
+    the frozen-halo colored forward+backward sweep on the local block."""
+    if sweeps <= 0:
+        return x if x is not None else jnp.zeros_like(b)
+    A, cs = lev.A, lev.colored
+    axis = A.axis
+    backend = hier.backend
+    rows_np = cs.rows
+
+    def body(blocks_s, diag_s, remote_s, b_blk, x_blk):
+        blocks = [_unstack(blk) for blk in blocks_s]
+        diag_l = diag_s[0]
+        remote = _unstack(remote_s)
+        x = x_blk
+        for s in range(int(sweeps)):
+            if A.remote_empty or (x_is_zero and s == 0):
+                beff = b_blk
+            else:
+                if A.halo_mode == "neighbor":
+                    halo = _exchange_neighbor(x, A.hw, axis, A.nshards)
+                else:
+                    halo = jax.lax.all_gather(x, axis, tiled=True)
+                beff = b_blk - _ops.spmv(remote, halo, backend=backend)
+            for order in (range(NCOLORS), range(NCOLORS - 1, -1, -1)):
+                for c in order:
+                    y = _ops.spmv(blocks[c], x, backend=backend)
+                    rws = jnp.asarray(rows_np[c])
+                    bc = jnp.take(beff, rws, mode="clip")
+                    dc = jnp.take(diag_l, rws, mode="clip")
+                    x = x.at[rws].add((bc - y) / jnp.where(dc != 0, dc, 1.0))
+        return x
+
+    if x is None:
+        x = jnp.zeros_like(b)
+    fn = compat.shard_map(
+        body, mesh=hier.mesh,
+        in_specs=(_part_spec(cs.blocks, axis), leading_axis_spec(axis, 2),
+                  _part_spec(A.remote, axis), leading_axis_spec(axis, 1),
+                  leading_axis_spec(axis, 1)),
+        out_specs=leading_axis_spec(axis, 1))
+    return fn(cs.blocks, cs.diag, A.remote, b, x)
+
+
+def _dist_restrict(hier: DistMGHierarchy, lev: DistMGLevel, r):
+    axis = lev.A.axis
+    f2c = lev.f2c_local
+    fn = compat.shard_map(
+        lambda rf: jnp.take(rf, jnp.asarray(f2c), mode="clip"),
+        mesh=hier.mesh, in_specs=(leading_axis_spec(axis, 1),),
+        out_specs=leading_axis_spec(axis, 1))
+    return fn(r)
+
+
+def _dist_prolong(hier: DistMGHierarchy, lev: DistMGLevel, xc):
+    axis = lev.A.axis
+    f2c = lev.f2c_local
+    mp = lev.A.mp
+
+    fn = compat.shard_map(
+        lambda xb: jnp.zeros((mp,), xb.dtype).at[jnp.asarray(f2c)].set(xb),
+        mesh=hier.mesh, in_specs=(leading_axis_spec(axis, 1),),
+        out_specs=leading_axis_spec(axis, 1))
+    return fn(xc)
+
+
+def v_cycle_dist(hier: DistMGHierarchy, r: jax.Array,
+                 level: int = 0) -> jax.Array:
+    """One distributed V-cycle from a zero guess (jit-able; collectives:
+    halo exchanges in the smoother + the overlapped residual SpMV)."""
+    lev = hier.levels[level]
+    if level == hier.nlevels - 1:
+        return _dist_smooth(hier, lev, r, None, hier.coarse_sweeps, True)
+    x = _dist_smooth(hier, lev, r, None, hier.pre, True)
+    res = r - dist_spmv(lev.A, x, hier.mesh, backend=hier.backend)
+    rc = _dist_restrict(hier, lev, res)
+    xc = v_cycle_dist(hier, rc, level + 1)
+    x = x + _dist_prolong(hier, lev, xc)
+    return _dist_smooth(hier, lev, r, x, hier.post, False)

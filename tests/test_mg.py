@@ -1,0 +1,287 @@
+"""repro.mg: coarsening oracles, colored SymGS vs sequential GS, V-cycle
+symmetry/PD, MG-PCG iteration counts, distributed MG-PCG (subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Format, convert, hpcg, spmv, to_dense_np
+from repro.core.solvers import cg, pcg
+from repro.mg import (build_colored, build_hierarchy, check_coloring,
+                      coarsen_execute, color_grid, galerkin_coarse,
+                      plan_coarsen, prolong, restrict, stencil27_coo,
+                      symgs, symgs_reference_np)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# Coarsening: restriction / prolongation vs dense oracles
+# ---------------------------------------------------------------------------
+
+
+def _dense_injection_np(nxc, nyc, nzc, nxf, nyf, nzf):
+    """Independent dense R (nc x nf): coarse (x,y,z) <- fine (2x,2y,2z)."""
+    nc, nf = nxc * nyc * nzc, nxf * nyf * nzf
+    R = np.zeros((nc, nf))
+    for zc in range(nzc):
+        for yc in range(nyc):
+            for xc in range(nxc):
+                i = xc + nxc * (yc + nyc * zc)
+                j = 2 * xc + nxf * (2 * yc + nyf * 2 * zc)
+                R[i, j] = 1.0
+    return R
+
+
+def _dense_trilinear_np(nxc, nyc, nzc, nxf, nyf, nzf):
+    """Independent dense P (nf x nc): per-axis weight 1 (even) / 0.5 (odd),
+    out-of-grid corners dropped (Dirichlet-0 ghost)."""
+    nc, nf = nxc * nyc * nzc, nxf * nyf * nzf
+    P = np.zeros((nf, nc))
+    for zf in range(nzf):
+        for yf in range(nyf):
+            for xf in range(nxf):
+                i = xf + nxf * (yf + nyf * zf)
+                axes = []
+                for cf, ncdim in ((xf, nxc), (yf, nyc), (zf, nzc)):
+                    if cf % 2 == 0:
+                        axes.append([(cf // 2, 1.0)])
+                    else:
+                        opts = [(cf // 2, 0.5)]
+                        if cf // 2 + 1 < ncdim:
+                            opts.append((cf // 2 + 1, 0.5))
+                        axes.append(opts)
+                for xc, wx in axes[0]:
+                    for yc, wy in axes[1]:
+                        for zc, wz in axes[2]:
+                            P[i, xc + nxc * (yc + nyc * zc)] += wx * wy * wz
+    return P
+
+
+def test_injection_restrict_prolong_vs_dense_oracle():
+    plan = plan_coarsen(4, 4, 4)
+    c = coarsen_execute(plan)
+    R = _dense_injection_np(2, 2, 2, 4, 4, 4)
+    rng = np.random.default_rng(0)
+    rf = rng.standard_normal(plan.nf).astype(np.float32)
+    xc = rng.standard_normal(plan.nc).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(restrict(c, jnp.asarray(rf))),
+                               R @ rf, rtol=1e-6, atol=1e-6)
+    # injection pairing: P = R^T exactly (V-cycle symmetry requirement)
+    np.testing.assert_allclose(np.asarray(prolong(c, jnp.asarray(xc))),
+                               R.T @ xc, rtol=1e-6, atol=1e-6)
+
+
+def test_trilinear_restrict_prolong_vs_dense_oracle():
+    plan = plan_coarsen(4, 6, 4, prolong="trilinear")
+    c = coarsen_execute(plan)
+    P = _dense_trilinear_np(2, 3, 2, 4, 6, 4)
+    rng = np.random.default_rng(1)
+    rf = rng.standard_normal(plan.nf).astype(np.float32)
+    xc = rng.standard_normal(plan.nc).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(prolong(c, jnp.asarray(xc))),
+                               P @ xc, rtol=1e-5, atol=1e-5)
+    # full weighting: R = P^T / 8
+    np.testing.assert_allclose(np.asarray(restrict(c, jnp.asarray(rf))),
+                               P.T @ rf / 8.0, rtol=1e-5, atol=1e-5)
+
+
+def test_stencil27_matches_generate_problem():
+    prob = hpcg.generate_problem(3, 4, 2)
+    D_ref = to_dense_np(hpcg.to_coo(prob))
+    D_dev = to_dense_np(stencil27_coo(3, 4, 2))
+    np.testing.assert_allclose(D_dev, D_ref, rtol=0, atol=0)
+
+
+def test_galerkin_coarse_symmetric_and_coarsens():
+    prob = hpcg.generate_problem(4, 4, 4)
+    plan = plan_coarsen(4, 4, 4, prolong="trilinear", coarse_op="galerkin")
+    Ac = galerkin_coarse(hpcg.to_coo(prob), plan)
+    D = to_dense_np(Ac)
+    assert D.shape == (8, 8)
+    np.testing.assert_allclose(D, D.T, rtol=1e-6, atol=1e-6)
+    assert np.all(np.linalg.eigvalsh(D.astype(np.float64)) > 0)
+
+
+def test_plan_coarsen_validation():
+    with pytest.raises(ValueError):
+        plan_coarsen(3, 4, 4)  # odd dim
+    with pytest.raises(ValueError):
+        plan_coarsen(4, 4, 4, coarse_op="galerkin")  # degenerate pairing
+
+
+# ---------------------------------------------------------------------------
+# Colored SymGS vs the sequential NumPy oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dims", [(4, 4, 4), (5, 3, 4), (8, 8, 2)])
+def test_colored_symgs_matches_sequential_gs(dims):
+    prob = hpcg.generate_problem(*dims)
+    C = hpcg.to_coo(prob)
+    colors = color_grid(*dims)
+    cs = build_colored(C, dims=dims, fmt=Format.CSR, check=True)
+    rng = np.random.default_rng(0)
+    n = prob.shape[0]
+    b = rng.standard_normal(n).astype(np.float32)
+    x0 = rng.standard_normal(n).astype(np.float32)
+    got = symgs(cs, jnp.asarray(b), jnp.asarray(x0), sweeps=2, backend="ref")
+    want = symgs_reference_np(prob.row, prob.col, prob.val, colors, b, x0,
+                              sweeps=2)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_colored_blocks_any_format_agree():
+    dims = (4, 4, 4)
+    prob = hpcg.generate_problem(*dims)
+    C = hpcg.to_coo(prob)
+    b = jnp.asarray(hpcg.rhs_for_ones(prob))
+    base = symgs(build_colored(C, dims=dims, fmt=Format.CSR), b, backend="ref")
+    for fmt in (Format.ELL, Format.DIA, Format.COO):
+        cs = build_colored(C, dims=dims, fmt=fmt)
+        assert set(cs.formats) == {fmt}
+        got = symgs(cs, b, backend="ref")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_check_coloring_rejects_improper():
+    prob = hpcg.generate_problem(4, 4, 4)
+    with pytest.raises(ValueError, match="improper coloring"):
+        check_coloring(hpcg.to_coo(prob),
+                       np.zeros(prob.shape[0], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# V-cycle: symmetry + positive definiteness (PCG's requirements)
+# ---------------------------------------------------------------------------
+
+
+def test_vcycle_apply_M_symmetric_positive_definite():
+    prob = hpcg.generate_problem(4, 4, 4)
+    hier = build_hierarchy(prob, backend="ref")
+    n = prob.shape[0]
+    M = np.asarray(jax.jit(jax.vmap(hier.apply_M()))(jnp.eye(n, dtype=jnp.float32))).T
+    sym_err = np.abs(M - M.T).max() / np.abs(M).max()
+    assert sym_err < 1e-5, sym_err
+    w = np.linalg.eigvalsh(((M + M.T) / 2).astype(np.float64))
+    assert w.min() > 0, w.min()
+
+
+# ---------------------------------------------------------------------------
+# MG-PCG convergence (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_mg_pcg_beats_cg_16cubed():
+    prob = hpcg.generate_problem(16, 16, 16)
+    A = convert(hpcg.to_coo(prob), Format.CSR)
+    b = jnp.asarray(hpcg.rhs_for_ones(prob))
+    apply_A = lambda v: spmv(A, v)  # noqa: E731
+    hier = build_hierarchy(prob, backend="ref")
+    r_cg = jax.jit(lambda bb: cg(apply_A, bb, tol=1e-8, maxiter=500))(b)
+    r_mg = jax.jit(lambda bb: pcg(apply_A, bb, tol=1e-8, maxiter=500,
+                                  apply_M=hier.apply_M()))(b)
+    assert int(r_mg.iters) < int(r_cg.iters), (int(r_mg.iters),
+                                               int(r_cg.iters))
+    assert int(r_cg.iters) < 500  # both actually converged
+    np.testing.assert_allclose(np.asarray(r_mg.x), 1.0, rtol=1e-3, atol=1e-3)
+
+
+def test_mg_pcg_trilinear_galerkin_converges():
+    prob = hpcg.generate_problem(8, 8, 8)
+    A = convert(hpcg.to_coo(prob), Format.CSR)
+    b = jnp.asarray(hpcg.rhs_for_ones(prob))
+    apply_A = lambda v: spmv(A, v)  # noqa: E731
+    hier = build_hierarchy(prob, prolong="trilinear", coarse_op="galerkin",
+                           backend="ref")
+    res = pcg(apply_A, b, tol=1e-8, maxiter=200, apply_M=hier.apply_M())
+    assert int(res.iters) < 200
+    np.testing.assert_allclose(np.asarray(res.x), 1.0, rtol=1e-3, atol=1e-3)
+
+
+def test_hierarchy_per_level_format_selection():
+    from repro.tuning import FormatPolicy
+
+    prob = hpcg.generate_problem(8, 8, 8)
+    policy = FormatPolicy("analytic")
+    hier = build_hierarchy(prob, policy=policy, backend="ref")
+    fmts = hier.formats()
+    assert len(fmts) >= 2
+    for rec in fmts:
+        assert rec["A"] in [f.name for f in policy.candidates]
+        assert rec["colors"] is not None and len(rec["colors"]) == 8
+    # the selection is real: solve still converges with the chosen formats
+    A = convert(hpcg.to_coo(prob), Format.CSR)
+    b = jnp.asarray(hpcg.rhs_for_ones(prob))
+    res = pcg(lambda v: spmv(A, v), b, tol=1e-8, maxiter=100,
+              apply_M=hier.apply_M())
+    assert int(res.iters) < 100
+
+
+def test_jacobi_smoother_hierarchy_converges():
+    prob = hpcg.generate_problem(8, 8, 8)
+    A = convert(hpcg.to_coo(prob), Format.CSR)
+    b = jnp.asarray(hpcg.rhs_for_ones(prob))
+    hier = build_hierarchy(prob, smoother="jacobi", pre=2, post=2,
+                           backend="ref")
+    res = pcg(lambda v: spmv(A, v), b, tol=1e-8, maxiter=200,
+              apply_M=hier.apply_M())
+    assert int(res.iters) < 200
+    np.testing.assert_allclose(np.asarray(res.x), 1.0, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Distributed MG-PCG (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def _run_subprocess(body: str):
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, %r)
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.core import hpcg, Format
+        from repro.core.distributed import distribute_vector
+        from repro.core.solvers import cg, pcg, operator
+        from repro.mg import build_dist_hierarchy
+    """ % os.path.abspath(SRC)) + textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    return res.stdout
+
+
+def test_dist_mg_pcg_beats_cg_8shards():
+    out = _run_subprocess("""
+        mesh = jax.make_mesh((8,), ("rows",))
+        prob = hpcg.generate_problem(16, 16, 16)
+        hier = build_dist_hierarchy(prob, mesh, "rows", mode="multiformat",
+                                    tune="analytic")
+        assert hier.nlevels >= 2, hier
+        fmts = hier.formats()
+        for rec in fmts:  # per-level per-shard selection ran
+            assert len(rec["local"]) == 8, rec
+        A = hier.levels[0].A
+        b = distribute_vector(hpcg.rhs_for_ones(prob), mesh, "rows")
+        apply_A = operator(A, mesh, backend="ref")
+        r_cg = jax.jit(lambda bb: cg(apply_A, bb, tol=1e-8, maxiter=500))(b)
+        r_mg = jax.jit(lambda bb: pcg(apply_A, bb, tol=1e-8, maxiter=500,
+                                      apply_M=hier.apply_M()))(b)
+        assert int(r_mg.iters) < int(r_cg.iters), (int(r_mg.iters),
+                                                   int(r_cg.iters))
+        assert int(r_cg.iters) < 500
+        err = float(np.abs(np.asarray(r_mg.x) - 1.0).max())
+        assert err < 1e-3, err
+        print("DIST_MG_OK", int(r_mg.iters), int(r_cg.iters))
+    """)
+    assert "DIST_MG_OK" in out

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.core import (DynamicMatrix, Format, convert, extract_diagonal,
                         hpcg, spmv)
-from repro.core.solvers import cg, cg_fixed_iters, pcg
+from repro.core.solvers import cg, cg_fixed_iters, operator, pcg
 
 
 def _system(nx=6, ny=6, nz=6, fmt=Format.CSR):
@@ -66,6 +66,35 @@ def test_cg_fixed_iters_matches_cg_trajectory():
     r2 = cg_fixed_iters(apply_A, b, iters=10)
     np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_pcg_apply_M_generalizes_jacobi():
+    """pcg(apply_M=) with the Jacobi map reproduces pcg(diag_A=) exactly."""
+    A, b = _system(6, 6, 6)
+    d = extract_diagonal(A)
+    apply_A = lambda v: spmv(A, v)
+    r1 = pcg(apply_A, b, d, tol=1e-7, maxiter=300)
+    minv = 1.0 / d
+    r2 = pcg(apply_A, b, tol=1e-7, maxiter=300, apply_M=lambda r: minv * r)
+    assert int(r1.iters) == int(r2.iters)
+    np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pcg_requires_some_preconditioner():
+    A, b = _system(4, 4, 4)
+    with pytest.raises(ValueError, match="apply_M"):
+        pcg(lambda v: spmv(A, v), b)
+
+
+def test_operator_threads_cfg_to_kernels():
+    """operator(cfg=) pins an explicit kernel tile config (satellite of the
+    kernel-config autotuning PR: the solver-facing closure accepts it)."""
+    A, b = _system(4, 4, 4)  # CSR
+    y_ref = np.asarray(spmv(A, b))
+    y_cfg = np.asarray(operator(A, backend="pallas",
+                                cfg={"tm": 32, "tk": 256})(b))
+    np.testing.assert_allclose(y_cfg, y_ref, rtol=1e-4, atol=1e-4)
 
 
 def test_cg_with_dynamic_matrix_switching():
