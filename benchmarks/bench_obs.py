@@ -1,0 +1,106 @@
+"""Observability deliverable: localize the distributed overlap loss.
+
+``results/generated_tables.md`` shows ghost-mode distributed SpMV
+regressing at P=8 (``scaling_spmv_ghost_p8`` ~0.78x vs reference) after
+scaling fine at P=2/4 — the halo exchange stops overlapping with local
+compute somewhere between 4 and 8 shards. This bench answers *where*
+using :func:`repro.core.distributed.dist_spmv_phase`: per shard count it
+times the production SpMV (``full``) against its two halves run alone —
+
+  * ``local``     local SpMV only, no collective issued;
+  * ``exchange``  halo exchange + remote SpMV only, no local SpMV —
+
+and reports ``hidden_us = local + exchange - full``: the wall time XLA's
+latency-hiding scheduler actually overlapped. ``hidden_frac`` normalizes
+by ``min(local, exchange)`` (the most overlap that phase pair could ever
+hide): ~1.0 means the exchange is fully hidden behind local compute, ~0
+means the two phases serialized and the overlap is lost.
+
+Runs in subprocesses (one forced host-device view per shard count), same
+harness shape as ``bench_scaling``. Rows land in ``BENCH_obs.json`` via
+``python -m benchmarks.run --only obs`` and render with
+``python -m repro.obs.report --bench BENCH_obs.json``.
+"""
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = """
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+os.environ.setdefault("REPRO_TUNING_CACHE",
+                      os.path.join(tempfile.mkdtemp(), "selections.json"))
+import sys, time, json
+sys.path.insert(0, %(src)r)
+import jax, numpy as np
+from repro.core import Format, hpcg
+from repro.core.distributed import (build_dist_matrix, dist_spmv,
+                                    dist_spmv_phase, distribute_vector)
+from repro.obs import metrics
+
+mesh = jax.make_mesh((%(ndev)d,), ("rows",))
+prob = hpcg.generate_problem(*%(grid)r)
+x = distribute_vector(np.ones(prob.shape[0], np.float32), mesh, "rows")
+A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
+                      "rows", local_format=Format.CSR,
+                      remote_format=Format.COO)  # the ghost config
+
+fns = {
+    "full": jax.jit(lambda a, v: dist_spmv(a, v, mesh)),
+    "local": jax.jit(lambda a, v: dist_spmv_phase(a, v, mesh, phase="local")),
+    "exchange": jax.jit(
+        lambda a, v: dist_spmv_phase(a, v, mesh, phase="exchange")),
+}
+out = {"phases": {}, "halo_mode": A.halo_mode, "hw": int(A.hw),
+       "remote_empty": bool(A.remote_empty)}
+for name, f in fns.items():
+    jax.block_until_ready(f(A, x))  # compile
+    best = float("inf")
+    for _ in range(3):  # min over repeats: shields against scheduler noise
+        t0 = time.perf_counter()
+        for _ in range(%(iters)d):
+            jax.block_until_ready(f(A, x))
+        best = min(best, (time.perf_counter() - t0) / %(iters)d)
+    out["phases"][name] = best
+out["halo_bytes"] = metrics.value("halo.bytes")
+print("RESULT " + json.dumps(out))
+"""
+
+
+def run(shards=(1, 2, 4, 8), grid=(16, 16, 32), iters=20):
+    rows = []
+    for ndev in shards:
+        script = SCRIPT % {"ndev": ndev, "src": os.path.abspath(SRC),
+                           "grid": tuple(grid), "iters": iters}
+        res = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=900)
+        line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")]
+        if not line:
+            rows.append((f"obs_overlap_p{ndev}_FAILED", 0.0, res.stderr[-200:]))
+            continue
+        out = json.loads(line[0][len("RESULT "):])
+        ph = out["phases"]
+        full, loc, exc = ph["full"], ph["local"], ph["exchange"]
+        derived = (f"local_us={loc * 1e6:.0f};exch_us={exc * 1e6:.0f};"
+                   f"halo_mode={out['halo_mode']};hw={out['hw']};"
+                   f"halo_bytes={out['halo_bytes']:.0f}")
+        if not out["remote_empty"]:
+            # overlap stats only when there is an exchange to hide (at P=1
+            # the remote part is statically empty — full == local)
+            hidden = loc + exc - full
+            denom = min(loc, exc) or 1.0
+            derived += (f";hidden_us={hidden * 1e6:.0f};"
+                        f"hidden_frac={max(0.0, hidden) / denom:.3f}")
+        rows.append((f"obs_overlap_ghost_p{ndev}", full * 1e6, derived))
+    if rows and all(name.endswith("_FAILED") for name, _, _ in rows):
+        raise RuntimeError(f"bench_obs: all shard counts failed; "
+                           f"last: {rows[-1]}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(c) for c in r))

@@ -2,8 +2,9 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.make_experiments_md
 Reads results/dryrun (roofline), BENCH_dist.json (the ``scaling`` suite of
-benchmarks/run.py) and BENCH_hpcg.json (the ``hpcg`` solver suite); writes
-the tables to results/generated_tables.md for inclusion.
+benchmarks/run.py), BENCH_hpcg.json (the ``hpcg`` solver suite) and
+BENCH_obs.json (the ``obs`` overlap-decomposition suite); writes the
+tables to results/generated_tables.md for inclusion.
 """
 from __future__ import annotations
 
@@ -98,6 +99,44 @@ def hpcg_table() -> str:
     return "\n".join(out)
 
 
+def obs_table() -> str:
+    """Render BENCH_obs.json's overlap decomposition via repro.obs.report."""
+    path = os.path.join(ROOT, "BENCH_obs.json")
+    try:
+        doc = json.load(open(path))
+    except (OSError, ValueError):
+        return "_no BENCH_obs.json — run `python -m benchmarks.run --only obs`_"
+    from repro.obs import report
+    rows = report.overlap_rows(doc)
+    if not rows:
+        return "_BENCH_obs.json holds no obs_overlap rows_"
+    out = ["| version | P | local µs | exch µs | sum µs | full µs | "
+           "hidden µs | hidden frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        loc, exc, full = r.get("local_us", 0.0), r.get("exch_us", 0.0), r["full_us"]
+        if "hidden_frac" in r:  # absent at P=1 (remote part statically empty)
+            hidden = loc + exc - full
+            denom = min(loc, exc) or 1.0
+            hid, frac = f"{hidden:.0f}", f"{max(0.0, hidden) / denom:.0%}"
+        else:
+            hid = frac = "-"
+        out.append(f"| {r['version']} | {r['p']} | {loc:.0f} | {exc:.0f} "
+                   f"| {loc + exc:.0f} | {full:.0f} | {hid} | {frac} |")
+    out.append("")
+    out.append(
+        "`hidden = local + exchange - full` is the wall time XLA's scheduler "
+        "overlapped when both phases run together; the fraction normalizes "
+        "by `min(local, exchange)` (the most that pair could ever hide). "
+        "A fraction near 100% means the halo exchange is fully hidden "
+        "behind local compute; near 0% means the phases serialized — the "
+        "shard count where the fraction collapses is where the ghost-mode "
+        "p8 regression (`scaling_spmv_ghost_p8`) comes from. Produced by "
+        "`benchmarks/bench_obs.py` via `dist_spmv_phase`; render from the "
+        "artifact with `python -m repro.obs.report --bench BENCH_obs.json`.")
+    return "\n".join(out)
+
+
 def main():
     parts = ["## Generated tables (benchmarks/make_experiments_md.py)\n"]
     parts.append("### Dry-run, single pod (16x16 = 256 chips)\n")
@@ -110,6 +149,8 @@ def main():
     parts.append(dist_table())
     parts.append("\n### HPCG solvers: CG vs Jacobi-PCG vs MG-PCG (BENCH_hpcg.json)\n")
     parts.append(hpcg_table())
+    parts.append("\n### Exchange/compute overlap per shard count (BENCH_obs.json)\n")
+    parts.append(obs_table())
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         f.write("\n".join(parts) + "\n")

@@ -12,15 +12,20 @@ Prints ``name,us_per_call,derived`` CSV and persists the perf trajectory:
   bench_hpcg       —       HPCG solves: CG vs Jacobi-PCG vs MG-PCG
                            (iterations-to-tol + wall-clock, uniform-CSR vs
                            per-level multiformat hierarchies)
+  bench_obs        —       exchange/local overlap decomposition per shard
+                           count (the p8 diagnostic; see repro.obs.report)
   roofline         —       dry-run roofline table (if results are present)
 
 SpMV-side suites (formats/kernels/overhead) are written to
 ``BENCH_spmv.json``, conversion-side suites (convert/switch) to
 ``BENCH_convert.json``, the distributed scaling suite to
-``BENCH_dist.json`` and the HPCG solver suite to ``BENCH_hpcg.json`` in
-``--json-dir`` (default: cwd). Re-runs with ``--only`` merge rows by name
-into the existing files instead of wiping them, so partial runs keep the
-trajectory intact.
+``BENCH_dist.json``, the HPCG solver suite to ``BENCH_hpcg.json`` and the
+observability suite to ``BENCH_obs.json`` in ``--json-dir`` (default:
+cwd). Every artifact's meta embeds ``repro.obs.env_info()`` (jax version,
+backend, device kind/count, interpret mode, git rev) so numbers are
+attributable to the environment that produced them. Re-runs with
+``--only`` merge rows by name into the existing files instead of wiping
+them, so partial runs keep the trajectory intact.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only A,B] [--quick]
 """
@@ -33,6 +38,7 @@ SPMV_SUITES = ("overhead", "formats", "kernels")
 CONVERT_SUITES = ("convert", "switch")
 DIST_SUITES = ("scaling",)
 HPCG_SUITES = ("hpcg",)
+OBS_SUITES = ("obs",)
 
 
 def _emit_json(path, rows, meta):
@@ -125,7 +131,7 @@ def main(argv=None):
     only = tuple(s for s in args.only.split(",") if s)
 
     from benchmarks import (bench_convert, bench_formats, bench_hpcg,
-                            bench_overhead, bench_scaling)
+                            bench_obs, bench_overhead, bench_scaling)
 
     suites = {
         "overhead": lambda: bench_overhead.run(
@@ -145,6 +151,9 @@ def main(argv=None):
         "hpcg": lambda: bench_hpcg.run(
             grids=((8, 8, 8),), iters=1) if args.quick else
             bench_hpcg.run(),
+        "obs": lambda: bench_obs.run(
+            (1, 2, 4), grid=(8, 8, 16), iters=10) if args.quick else
+            bench_obs.run((1, 2, 4, 8)),
     }
     results = {}
     print("name,us_per_call,derived")
@@ -160,11 +169,14 @@ def main(argv=None):
             print(f"{name}_FAILED,0,{e!r}")
 
     import jax
-    meta = {"backend": jax.default_backend(), "quick": bool(args.quick)}
+    from repro.obs import env_info
+    meta = {"backend": jax.default_backend(), "quick": bool(args.quick),
+            "env": env_info()}
     spmv_rows = [r for s in SPMV_SUITES for r in results.get(s, ())]
     convert_rows = [r for s in CONVERT_SUITES for r in results.get(s, ())]
     dist_rows = [r for s in DIST_SUITES for r in results.get(s, ())]
     hpcg_rows = [r for s in HPCG_SUITES for r in results.get(s, ())]
+    obs_rows = [r for s in OBS_SUITES for r in results.get(s, ())]
     if spmv_rows:
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_spmv.json"),
                                   spmv_rows, meta))
@@ -177,6 +189,9 @@ def main(argv=None):
     if hpcg_rows:
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_hpcg.json"),
                                   hpcg_rows, meta))
+    if obs_rows:
+        print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_obs.json"),
+                                  obs_rows, meta))
 
     # roofline table pointer (if the dry-run has produced results)
     if not only or "roofline" in only:

@@ -33,6 +33,7 @@ from repro.core import Format, hpcg  # noqa: E402
 from repro.core.distributed import (build_dist_matrix,  # noqa: E402
                                     distribute_vector)
 from repro.core.solvers import cg, operator, pcg  # noqa: E402
+from repro.obs import trace  # noqa: E402
 
 
 def main(argv=None):
@@ -62,6 +63,9 @@ def main(argv=None):
     p.add_argument("--mg-levels", type=int, default=None,
                    help="cap the MG hierarchy depth (default: coarsen while "
                         "dims stay even and slabs divide the mesh)")
+    p.add_argument("--verbose", action="store_true",
+                   help="print the per-iteration convergence curve "
+                        "(||r_k|| from the solver's residual history)")
     args = p.parse_args(argv)
 
     ndev = len(jax.devices())
@@ -70,7 +74,8 @@ def main(argv=None):
 
     # --- 1. problem setup ---------------------------------------------------
     t0 = time.perf_counter()
-    prob = hpcg.generate_problem(*args.grid)
+    with trace.span("build.problem", grid="x".join(map(str, args.grid))):
+        prob = hpcg.generate_problem(*args.grid)
     print(f"setup: n={prob.shape[0]} nnz={len(prob.val)} "
           f"({time.perf_counter() - t0:.2f}s)")
 
@@ -84,6 +89,9 @@ def main(argv=None):
     # partition + per-shard selection twice).
     t0 = time.perf_counter()
     hier = None
+    opt_span = trace.span("build.optimize", mode=args.mode,
+                          precond=args.precond)
+    opt_span.__enter__()
     if args.precond == "mg":
         from repro.mg import build_dist_hierarchy
 
@@ -112,6 +120,7 @@ def main(argv=None):
             print("  per-shard remote formats:",
                   [names[i] for i in np.asarray(A.remote.active_id)])
 
+    opt_span.__exit__(None, None, None)
     b = distribute_vector(hpcg.rhs_for_ones(prob), mesh, "rows")
 
     # --- 3. optimized timing -------------------------------------------------
@@ -130,9 +139,13 @@ def main(argv=None):
         solve = jax.jit(lambda a, bb: cg(
             operator(a, mesh, backend=args.backend), bb, tol=args.tol,
             maxiter=args.maxiter))
-    res = jax.block_until_ready(solve(A, b))  # compile + warm
+    with trace.span("solver.compile", precond=args.precond) as sp:
+        sp.sync(solve(A, b))  # compile + warm
     t0 = time.perf_counter()
-    res = jax.block_until_ready(solve(A, b))
+    with trace.span("solver.solve", precond=args.precond) as sp:
+        res = solve(A, b)
+        sp.sync(res)
+    res = jax.block_until_ready(res)
     dt = time.perf_counter() - t0
     iters = int(res.iters)
     # HPCG's figure of merit: ~ (2 * nnz) flops per SpMV, 1 SpMV per iter
@@ -142,7 +155,22 @@ def main(argv=None):
     err = float(np.abs(np.asarray(res.x) - 1.0).max())
     print(f"solve: {iters} iters, {dt * 1e3:.1f} ms, ||r||={float(res.resnorm):.2e}, "
           f"SpMV-rate ~{gflops:.2f} GFLOP/s")
+    if args.verbose and res.history is not None:
+        hist = np.asarray(res.history)
+        hist = hist[~np.isnan(hist)]
+        print("convergence (||r_k||, relative to ||r_0||):")
+        r0 = hist[0] if hist.size and hist[0] > 0 else 1.0
+        for k, rn in enumerate(hist):
+            print(f"  iter {k:4d}: {rn:.3e}  rel={rn / r0:.3e}")
     print(f"validation: max|x - 1| = {err:.2e} -> {'PASS' if err < 1e-3 else 'FAIL'}")
+
+    if trace.enabled():
+        print("\n# trace summary (REPRO_TRACE=" + trace.mode() + ")")
+        print(trace.summary())
+        if trace.mode() == "full":
+            out = os.environ.get("REPRO_TRACE_EXPORT", "trace.json")
+            print(f"trace exported: {trace.export_chrome(out)} "
+                  f"(render: python -m repro.obs.report {out})")
     return 0 if err < 1e-3 else 1
 
 

@@ -36,6 +36,8 @@ import numpy as np
 from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
                                 coo_from_arrays)
 from repro.core.ops import csr_row_ids
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 # Sentinel pushed past every valid diagonal offset / block id during the
 # device-side ``unique`` sweeps (offsets are < n <= int32 max; block grids
@@ -45,14 +47,43 @@ _SENTINEL = np.iinfo(np.int32).max
 # Every device->host transfer the symbolic phase performs goes through
 # ``_planned_pull`` below: the pull is executed under an explicit
 # ``transfer_guard`` allowance (so builders can run with unplanned pulls
-# *disallowed*) and counted, which is how tests assert that batched builds
-# perform a constant number of host transfers independent of shard count.
-_PLANNED_PULLS = 0
+# *disallowed*) and counted (the ``planned_pulls`` metric), which is how
+# tests assert that batched builds perform a constant number of host
+# transfers independent of shard count.
 
 
 def planned_pull_count() -> int:
-    """Number of sanctioned symbolic-phase device->host pulls so far."""
-    return _PLANNED_PULLS
+    """Number of sanctioned symbolic-phase device->host pulls so far.
+
+    Process-monotonic. For order-independent assertions use
+    :func:`planned_pulls_scope` instead of before/after subtraction.
+    """
+    return int(_metrics.value("planned_pulls"))
+
+
+class planned_pulls_scope:
+    """``with planned_pulls_scope() as s: ...; s.count`` — the number of
+    sanctioned pulls performed *inside* the scope, regardless of what ran
+    before it in the process (the fix for order-dependent transfer-count
+    assertions across a test suite). After exit, ``count`` freezes at the
+    scope-closing value — pulls performed later never leak in."""
+
+    _final: Optional[int] = None
+
+    def __enter__(self):
+        self._final = None
+        self._scope = _metrics.scope()
+        return self
+
+    def __exit__(self, *exc):
+        self._final = int(self._scope.delta("planned_pulls"))
+        return False
+
+    @property
+    def count(self) -> int:
+        if self._final is not None:
+            return self._final
+        return int(self._scope.delta("planned_pulls"))
 
 
 def _planned_pull(x) -> np.ndarray:
@@ -62,8 +93,7 @@ def _planned_pull(x) -> np.ndarray:
     pipeline; it is exempted from any active ``transfer_guard`` and counted
     so callers can verify no O(shards) pulls sneak in.
     """
-    global _PLANNED_PULLS
-    _PLANNED_PULLS += 1
+    _metrics.inc("planned_pulls")
     with jax.transfer_guard_device_to_host("allow"):
         return np.asarray(x)
 
@@ -636,4 +666,75 @@ def convert(A, fmt: Format, plan: Optional[SwitchPlan] = None, **kwargs):
         return convert_execute(A, plan)
     if getattr(A, "format", None) == fmt and not kwargs:
         return A
-    return convert_execute(A, plan_switch(A, fmt, **kwargs))
+    with _trace.span("convert.any", target=fmt.name):
+        return convert_execute(A, plan_switch(A, fmt, **kwargs))
+
+
+# ---------------------------------------------------------------------------
+# Observability: plan/execute spans + padding-waste histograms
+# ---------------------------------------------------------------------------
+# Spans here wrap *host-side* symbolic work (plan_switch) or the dispatch
+# of the numeric phase; when a wrapped function is itself being traced by
+# jax (tracer inputs), the span measures trace/compile time, which the
+# attribution report counts once per compilation rather than per call.
+# Padding-waste histograms cost two static-int divisions — every input
+# to them (shape, nnz, plan fields) is host metadata, never device data.
+
+
+def _observe_plan_waste(A, plan: SwitchPlan) -> None:
+    try:
+        m = int(A.shape[0])
+        nnz = int(A.nnz)
+    except (TypeError, AttributeError):  # duck-typed inputs without nnz
+        return
+    if m <= 0 or plan.ell_k is None:
+        return
+    slots = m * int(plan.ell_k)
+    if slots <= 0:
+        return
+    if Format(plan.target) == Format.ELL:
+        _metrics.observe("ell.padding_waste",
+                         min(1.0, max(0.0, 1.0 - nnz / slots)))
+    elif Format(plan.target) == Format.HYB:
+        # ELL-part occupancy estimate: nnz minus (at most) the planned COO
+        # overflow capacity lands in the k-wide slots.
+        ell_nnz = max(0, nnz - int(plan.hyb_coo_capacity or 0))
+        _metrics.observe("hyb.padding_waste",
+                         min(1.0, max(0.0, 1.0 - ell_nnz / slots)))
+
+
+def _traced_plan(fn, name: str):
+    @functools.wraps(fn)
+    def wrapper(A, fmt, **kwargs):
+        fmt = Format(fmt)
+        if _trace.mode() == "off":
+            plan = fn(A, fmt, **kwargs)
+        else:
+            with _trace.span(name, fmt=fmt.name) as sp:
+                plan = fn(A, fmt, **kwargs)
+                if plan.ell_k is not None:
+                    sp.set(ell_k=plan.ell_k)
+                if plan.dia_offsets is not None:
+                    sp.set(n_offsets=len(plan.dia_offsets))
+        _observe_plan_waste(A, plan)
+        return plan
+    return wrapper
+
+
+# Rebind so internal callers (convert, coo_to_*, the tuning policy, the
+# distributed builders) all go through the instrumented entry points.
+plan_switch = _traced_plan(plan_switch, "plan.switch")
+plan_switch_batch = _traced_plan(plan_switch_batch, "plan.switch_batch")
+
+
+def _traced_execute(fn):
+    @functools.wraps(fn)
+    def wrapper(A, plan: SwitchPlan):
+        if _trace.mode() == "off":
+            return fn(A, plan)
+        with _trace.span("convert.execute", target=Format(plan.target).name):
+            return fn(A, plan)
+    return wrapper
+
+
+convert_execute = _traced_execute(convert_execute)

@@ -38,6 +38,7 @@ its own slab (leading dim 1) and unstacks it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
@@ -52,6 +53,8 @@ from repro.core.convert import (SwitchPlan, convert_execute_batch,
 from repro.core import ops as _ops
 from repro.core.dynamic import SwitchDynamicMatrix
 from repro.core.formats import COO, Format
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -184,11 +187,70 @@ def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "auto",
     uniformly to every shard's SpMVs instead.
     """
     axis = A.axis
+    if not A.remote_empty:
+        # Exchange accounting. ``dist_spmv`` may run under an outer jit, in
+        # which case this host-side bookkeeping executes once at trace time
+        # (per compilation), not per device call — documented semantics of
+        # the ``halo.bytes`` counter.
+        itemsize = jnp.dtype(getattr(x, "dtype", jnp.float32)).itemsize
+        halo_elems = (2 * A.hw if A.halo_mode == "neighbor"
+                      else A.shape[1])
+        _metrics.inc("halo.bytes", A.nshards * halo_elems * itemsize)
+        if _trace.mode() != "off":
+            _trace.event("exchange.issue", mode=A.halo_mode, p=A.nshards,
+                         bytes=A.nshards * halo_elems * itemsize)
 
     def body(local_s, remote_s, x_blk):
         return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,
                            A.hw, axis, A.nshards, A.halo_mode, backend,
                            A.remote_empty, cfg=cfg)
+
+    fn = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(_part_spec(A.local, axis), _part_spec(A.remote, axis),
+                  leading_axis_spec(axis, 1)),
+        out_specs=leading_axis_spec(axis, 1))
+    if _trace.mode() == "off":
+        return fn(A.local, A.remote, x)
+    with _trace.span("exchange.dist_spmv", p=A.nshards,
+                     halo="empty" if A.remote_empty else A.halo_mode) as sp:
+        y = fn(A.local, A.remote, x)
+        sp.sync(y)
+    return y
+
+
+def dist_spmv_phase(A: DistSparseMatrix, x, mesh: Mesh, phase: str = "full",
+                    backend: str = "auto", cfg=None):
+    """Phase-decomposed distributed SpMV — the overlap diagnostic.
+
+    ``phase``:
+      * ``"full"``      the production path (:func:`dist_spmv`);
+      * ``"local"``     local SpMV only — no halo collective is issued;
+      * ``"exchange"``  halo exchange + remote SpMV only — no local SpMV.
+
+    Timing the three independently and comparing ``t_local + t_exchange``
+    against ``t_full`` measures how much of the exchange XLA's scheduler
+    actually hid behind local compute (``hidden = local + exchange -
+    full``); the per-shard-count sweep in ``benchmarks/bench_obs.py`` uses
+    this to localize where the ghost-mode p8 overlap is lost.
+    """
+    if phase == "full":
+        return dist_spmv(A, x, mesh, backend=backend, cfg=cfg)
+    if phase not in ("local", "exchange"):
+        raise ValueError(f"phase {phase!r} not in ('full', 'local', 'exchange')")
+    axis = A.axis
+
+    def body(local_s, remote_s, x_blk):
+        local, remote = _unstack(local_s), _unstack(remote_s)
+        if phase == "local":
+            return _ops.spmv(local, x_blk, backend=backend, cfg=cfg)
+        if A.remote_empty:
+            return jnp.zeros_like(x_blk)
+        if A.halo_mode == "neighbor":
+            halo = _exchange_neighbor(x_blk, A.hw, axis, A.nshards)
+        else:
+            halo = jax.lax.all_gather(x_blk, axis, tiled=True)
+        return _ops.spmv(remote, halo, backend=backend, cfg=cfg)
 
     fn = compat.shard_map(
         body, mesh=mesh,
@@ -373,8 +435,10 @@ def plan_dist_formats(local: COO, remote: COO, plan: DistPlan,
     candidates = tuple(Format(c) for c in candidates)
     if plan.candidates == candidates and plan.local_plans is not None:
         return plan
-    lplans = tuple(plan_switch_batch(local, f) for f in candidates)
-    rplans = tuple(plan_switch_batch(remote, f) for f in candidates)
+    with _trace.span("plan.dist_formats",
+                     candidates=",".join(f.name for f in candidates)):
+        lplans = tuple(plan_switch_batch(local, f) for f in candidates)
+        rplans = tuple(plan_switch_batch(remote, f) for f in candidates)
     return dataclasses.replace(plan, candidates=candidates,
                                local_plans=lplans, remote_plans=rplans)
 
@@ -545,6 +609,9 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
             _check_plan_fits(row, col, plan)
             if (plan.local_plans is not None
                     and plan.pattern_sig != _pattern_sig(row, col, val)):
+                # live pattern changed: the memoised format plans are void
+                _metrics.inc("replan.pattern_sig")
+                _trace.event("plan.replan", reason="pattern_sig")
                 plan = dataclasses.replace(plan, candidates=None,
                                            local_plans=None,
                                            remote_plans=None,
@@ -563,9 +630,12 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
         part_plan = dataclasses.replace(plan, candidates=None,
                                         local_plans=None, remote_plans=None,
                                         pattern_sig=None)
-        lcoos, rcoos = partition_execute_jit(np.asarray(row), np.asarray(col),
-                                             np.asarray(val), plan=part_plan,
-                                             dtype=dtype)
+        with _trace.span("build.partition_execute", p=plan.nshards) as sp:
+            lcoos, rcoos = partition_execute_jit(np.asarray(row),
+                                                 np.asarray(col),
+                                                 np.asarray(val),
+                                                 plan=part_plan, dtype=dtype)
+            sp.sync(lcoos.data, rcoos.data)
 
     if mode == "uniform":
         local = convert_execute_batch(
@@ -651,3 +721,40 @@ def activate_dist(A: DistSparseMatrix, part: str, fmt_or_ids) -> DistSparseMatri
                         "use mode='multiformat' for runtime switching")
     return (A._replace_parts(new, A.remote) if part == "local"
             else A._replace_parts(A.local, new))
+
+
+# ---------------------------------------------------------------------------
+# Observability wrappers (spans on the host-side build pipeline)
+# ---------------------------------------------------------------------------
+
+
+def _traced_plan_partition(fn):
+    @functools.wraps(fn)
+    def wrapper(row, col, val, shape, nshards, **kwargs):
+        if _trace.mode() == "off":
+            return fn(row, col, val, shape, nshards, **kwargs)
+        with _trace.span("plan.partition", p=int(nshards)) as sp:
+            plan = fn(row, col, val, shape, nshards, **kwargs)
+            sp.set(halo=plan.halo_mode, hw=plan.hw,
+                   remote_empty=plan.remote_empty)
+        return plan
+    return wrapper
+
+
+def _traced_build_dist(fn):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        if _trace.mode() == "off":
+            return fn(*args, **kwargs)
+        with _trace.span("build.dist",
+                         mode=kwargs.get("mode", "uniform")) as sp:
+            A = fn(*args, **kwargs)
+            sp.set(p=A.nshards, halo=A.halo_mode, hw=A.hw)
+        return A
+    return wrapper
+
+
+# Rebind so internal callers (partition_coo, build_dist_matrix, the MG
+# hierarchy builder) and importers all get the instrumented entry points.
+plan_partition = _traced_plan_partition(plan_partition)
+build_dist_matrix = _traced_build_dist(build_dist_matrix)

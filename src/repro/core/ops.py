@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BSR, COO, CSR, DIA, ELL, Dense, HYB
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 # ---------------------------------------------------------------------------
 # SpMV: y = A @ x
@@ -73,11 +75,23 @@ def kernel_route(A, op: str = "spmv", cache=None):
     if isinstance(A, _DYN_TYPES):
         A = getattr(A, "concrete", A)
     if not hasattr(A, "format"):
+        _metrics.inc("kernel.route.ref")
         return "ref", None
     from repro.tuning import kernel_tune  # lazy: tuning imports core
     rec = kernel_tune.best_config(A, op=op, cache=cache)
     if rec is not None and rec.speedup >= 1.0:
+        _metrics.inc("kernel.route.pallas")
+        if _trace.mode() != "off":
+            _trace.event("kernel.route", op=op, route="pallas",
+                         fmt=getattr(A.format, "name", str(A.format)),
+                         cfg=str(dict(rec.cfg)))
         return "pallas", dict(rec.cfg)
+    # distinguish "no record" from "a record exists but measured slower"
+    _metrics.inc("kernel.route.veto" if rec is not None else "kernel.route.ref")
+    if _trace.mode() != "off":
+        _trace.event("kernel.route", op=op,
+                     route="veto" if rec is not None else "ref",
+                     fmt=getattr(A.format, "name", str(A.format)))
     return "ref", None
 
 

@@ -24,6 +24,12 @@ class CGResult(NamedTuple):
     x: jax.Array
     iters: jax.Array
     resnorm: jax.Array  # final ||r||_2
+    # Fixed-size residual-norm history: ``history[k] = ||r_k||_2`` with
+    # ``history[0]`` the initial residual; entries past the converged
+    # iteration are NaN. The shape is ``(maxiter + 1,)`` regardless of
+    # where the solve stopped, so the whole result is jit/vmap-friendly
+    # (no data-dependent shapes). None for legacy constructions.
+    history: Optional[jax.Array] = None
 
 
 def operator(A, mesh=None, backend: str = "auto", cfg=None) -> Callable:
@@ -74,18 +80,20 @@ def cg(apply_A: Callable, b: jax.Array, x0: Optional[jax.Array] = None,
     r0 = b - apply_A(x0)
     rs0 = _ops.dot(r0, r0)
     tol2 = jnp.asarray(tol, b.dtype) ** 2 * jnp.maximum(rs0, 1e-30)
+    hist0 = jnp.full((maxiter + 1,), jnp.nan, b.dtype).at[0].set(jnp.sqrt(rs0))
 
     def cond(state):
-        (_, _, _, rs), k = state
+        (_, _, _, rs), k, _ = state
         return (rs > tol2) & (k < maxiter)
 
     def body(state):
-        s, k = state
-        return _cg_step(apply_A, s), k + 1
+        s, k, hist = state
+        s = _cg_step(apply_A, s)
+        return s, k + 1, hist.at[k + 1].set(jnp.sqrt(s[3]))
 
-    (x, r, p, rs), k = jax.lax.while_loop(cond, body,
-                                          ((x0, r0, r0, rs0), 0))
-    return CGResult(x, k, jnp.sqrt(rs))
+    (x, r, p, rs), k, hist = jax.lax.while_loop(cond, body,
+                                                ((x0, r0, r0, rs0), 0, hist0))
+    return CGResult(x, k, jnp.sqrt(rs), hist)
 
 
 def cg_fixed_iters(apply_A: Callable, b: jax.Array,
@@ -98,10 +106,13 @@ def cg_fixed_iters(apply_A: Callable, b: jax.Array,
     rs0 = _ops.dot(r0, r0)
 
     def body(state, _):
-        return _cg_step(apply_A, state), None
+        state = _cg_step(apply_A, state)
+        return state, jnp.sqrt(state[3])
 
-    (x, r, _, rs), _ = jax.lax.scan(body, (x0, r0, r0, rs0), None, length=iters)
-    return CGResult(x, jnp.asarray(iters), jnp.sqrt(rs))
+    (x, r, _, rs), norms = jax.lax.scan(body, (x0, r0, r0, rs0), None,
+                                        length=iters)
+    hist = jnp.concatenate([jnp.sqrt(rs0)[None], norms])
+    return CGResult(x, jnp.asarray(iters), jnp.sqrt(rs), hist)
 
 
 def pcg(apply_A: Callable, b: jax.Array,
@@ -137,17 +148,18 @@ def pcg(apply_A: Callable, b: jax.Array,
     rz0 = _ops.dot(r0, z0)
     rr0 = _ops.dot(r0, r0)
     tol2 = jnp.asarray(tol, b.dtype) ** 2 * jnp.maximum(rr0, 1e-30)
+    hist0 = jnp.full((maxiter + 1,), jnp.nan, b.dtype).at[0].set(jnp.sqrt(rr0))
 
     # ||r||^2 is carried in the loop state: the convergence test reads it
     # instead of re-reducing r every cond evaluation, and computing it next
     # to dot(r, z) in the body lets XLA batch the two reductions into one
     # all-reduce under sharding — one fewer global reduction per iteration.
     def cond(state):
-        _, _, _, _, rr, k = state
+        _, _, _, _, rr, k, _ = state
         return (rr > tol2) & (k < maxiter)
 
     def body(state):
-        x, r, p, rz, _, k = state
+        x, r, p, rz, _, k, hist = state
         Ap = apply_A(p)
         alpha = rz / jnp.maximum(_ops.dot(p, Ap), 1e-30)
         x = _ops.axpy(alpha, p, x)
@@ -157,8 +169,9 @@ def pcg(apply_A: Callable, b: jax.Array,
         rr_new = _ops.dot(r, r)
         beta = rz_new / jnp.maximum(rz, 1e-30)
         p = _ops.waxpby(1.0, z, beta, p)
-        return x, r, p, rz_new, rr_new, k + 1
+        return (x, r, p, rz_new, rr_new, k + 1,
+                hist.at[k + 1].set(jnp.sqrt(rr_new)))
 
-    x, r, p, rz, rr, k = jax.lax.while_loop(cond, body,
-                                            (x0, r0, p0, rz0, rr0, 0))
-    return CGResult(x, k, jnp.sqrt(rr))
+    x, r, p, rz, rr, k, hist = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, rr0, 0, hist0))
+    return CGResult(x, k, jnp.sqrt(rr), hist)

@@ -34,6 +34,7 @@ from repro.core.hpcg import HPCGProblem, to_coo as hpcg_to_coo
 from repro.mg.coarsen import (Coarsening, coarsen_execute, plan_coarsen,
                               prolong, restrict)
 from repro.mg.smoothers import ColoredSystem, build_colored, jacobi, symgs
+from repro.obs import trace as _trace
 
 # Coarsening stops once a level has this few rows (the coarse solve —
 # SymGS sweeps — handles the rest).
@@ -104,16 +105,23 @@ def _smooth(hier: MGHierarchy, lev: MGLevel, b, x, sweeps: int):
 
 
 def v_cycle(hier: MGHierarchy, r: jax.Array, level: int = 0) -> jax.Array:
-    """One V-cycle on ``A_level z = r`` from a zero initial guess."""
-    lev = hier.levels[level]
-    if level == hier.nlevels - 1:
-        return _smooth(hier, lev, r, None, hier.coarse_sweeps)
-    x = _smooth(hier, lev, r, None, hier.pre)
-    res = r - _ops.spmv(lev.A, x, backend=hier.backend)
-    rc = restrict(lev.coarsen, res)
-    xc = v_cycle(hier, rc, level + 1)
-    x = x + prolong(lev.coarsen, xc)
-    return _smooth(hier, lev, r, x, hier.post)
+    """One V-cycle on ``A_level z = r`` from a zero initial guess.
+
+    The ``mg.vcycle`` span fires per *trace* of the level recursion (the
+    cycle is usually jitted inside pcg's while_loop), so it attributes
+    trace/compile structure, not per-iteration device time — the
+    per-iteration cost shows up in the enclosing ``solver.*`` span.
+    """
+    with _trace.span("mg.vcycle", level=level):
+        lev = hier.levels[level]
+        if level == hier.nlevels - 1:
+            return _smooth(hier, lev, r, None, hier.coarse_sweeps)
+        x = _smooth(hier, lev, r, None, hier.pre)
+        res = r - _ops.spmv(lev.A, x, backend=hier.backend)
+        rc = restrict(lev.coarsen, res)
+        xc = v_cycle(hier, rc, level + 1)
+        x = x + prolong(lev.coarsen, xc)
+        return _smooth(hier, lev, r, x, hier.post)
 
 
 def _pick_format(C: COO, policy, fmt: Format):
@@ -154,14 +162,18 @@ def build_hierarchy(prob: HPCGProblem, nlevels: Optional[int] = None,
         last = ((nlevels is not None and len(levels) + 1 >= nlevels)
                 or any(d % 2 for d in dims)
                 or (C.shape[0] // 8) < MIN_COARSE_ROWS)
-        cz = None
-        if not last:
-            plan = plan_coarsen(*dims, prolong=prolong, coarse_op=coarse_op)
-            cz = coarsen_execute(plan, Af=C)
-        A = _pick_format(C, policy, fmt)
-        cs = (build_colored(C, dims=dims, fmt=fmt, policy=policy)
-              if smoother == "symgs" else None)
-        diag = cs.diag if cs is not None else _ops.extract_diagonal(C)
+        with _trace.span("build.mg_level", level=len(levels),
+                         dims="x".join(map(str, dims))) as sp:
+            cz = None
+            if not last:
+                plan = plan_coarsen(*dims, prolong=prolong,
+                                    coarse_op=coarse_op)
+                cz = coarsen_execute(plan, Af=C)
+            A = _pick_format(C, policy, fmt)
+            cs = (build_colored(C, dims=dims, fmt=fmt, policy=policy)
+                  if smoother == "symgs" else None)
+            diag = cs.diag if cs is not None else _ops.extract_diagonal(C)
+            sp.set(fmt=Format(A.format).name).sync(diag)
         levels.append(MGLevel(A, diag, cs, cz, dims))
         if last:
             break

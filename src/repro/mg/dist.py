@@ -46,6 +46,7 @@ from repro.core.dynamic import DEFAULT_CANDIDATES, SwitchDynamicMatrix
 from repro.core.formats import COO, Format
 from repro.core.hpcg import HPCGProblem, generate_problem, partition_problem
 from repro.mg.cycle import MIN_COARSE_ROWS
+from repro.obs import trace as _trace
 from repro.mg.smoothers import (NCOLORS, _split_colors_device, color_grid,
                                 color_ranks, color_rows_padded)
 
@@ -232,19 +233,22 @@ def build_dist_hierarchy(prob: HPCGProblem, mesh: Mesh, axis,
                 or (nx * ny * nz) // 8 < MIN_COARSE_ROWS)
         # one device scatter per level: the stacked (local, remote) parts
         # feed both the matrix builder (parts=) and the colored smoother
-        local, remote, plan = partition_problem(prob_l, nshards, dtype=dtype)
-        A = build_dist_matrix(prob_l.row, prob_l.col, prob_l.val,
-                              prob_l.shape, mesh, axis,
-                              local_format=local_format,
-                              remote_format=remote_format, mode=mode,
-                              tune=tune, candidates=candidates,
-                              plan=plan, check_plan=False, dtype=dtype,
-                              parts=(local, remote))
-        slab_dims = (nx, ny, nz // nshards)
-        colored = _build_dist_colored(local, slab_dims, mesh, axis,
-                                      fmt=smoother_format,
-                                      policy=smoother_policy,
-                                      candidates=candidates)
+        with _trace.span("build.mg_dist_level", level=len(levels),
+                         dims="x".join(map(str, dims)), p=nshards):
+            local, remote, plan = partition_problem(prob_l, nshards,
+                                                    dtype=dtype)
+            A = build_dist_matrix(prob_l.row, prob_l.col, prob_l.val,
+                                  prob_l.shape, mesh, axis,
+                                  local_format=local_format,
+                                  remote_format=remote_format, mode=mode,
+                                  tune=tune, candidates=candidates,
+                                  plan=plan, check_plan=False, dtype=dtype,
+                                  parts=(local, remote))
+            slab_dims = (nx, ny, nz // nshards)
+            colored = _build_dist_colored(local, slab_dims, mesh, axis,
+                                          fmt=smoother_format,
+                                          policy=smoother_policy,
+                                          candidates=candidates)
         f2c_local = None
         if not last:
             # coarse slab -> fine slab injection map (shard-local: fine
@@ -339,12 +343,13 @@ def v_cycle_dist(hier: DistMGHierarchy, r: jax.Array,
                  level: int = 0) -> jax.Array:
     """One distributed V-cycle from a zero guess (jit-able; collectives:
     halo exchanges in the smoother + the overlapped residual SpMV)."""
-    lev = hier.levels[level]
-    if level == hier.nlevels - 1:
-        return _dist_smooth(hier, lev, r, None, hier.coarse_sweeps, True)
-    x = _dist_smooth(hier, lev, r, None, hier.pre, True)
-    res = r - dist_spmv(lev.A, x, hier.mesh, backend=hier.backend)
-    rc = _dist_restrict(hier, lev, res)
-    xc = v_cycle_dist(hier, rc, level + 1)
-    x = x + _dist_prolong(hier, lev, xc)
-    return _dist_smooth(hier, lev, r, x, hier.post, False)
+    with _trace.span("mg.vcycle_dist", level=level):
+        lev = hier.levels[level]
+        if level == hier.nlevels - 1:
+            return _dist_smooth(hier, lev, r, None, hier.coarse_sweeps, True)
+        x = _dist_smooth(hier, lev, r, None, hier.pre, True)
+        res = r - dist_spmv(lev.A, x, hier.mesh, backend=hier.backend)
+        rc = _dist_restrict(hier, lev, res)
+        xc = v_cycle_dist(hier, rc, level + 1)
+        x = x + _dist_prolong(hier, lev, xc)
+        return _dist_smooth(hier, lev, r, x, hier.post, False)

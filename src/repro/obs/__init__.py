@@ -1,0 +1,22 @@
+"""repro.obs — structured tracing, counters, and per-phase profiling.
+
+Three small, zero-heavy-dep pieces:
+
+* :mod:`repro.obs.trace`   — ``span()``/``event()`` tracer gated by
+  ``REPRO_TRACE=off|summary|full``, Chrome/Perfetto export, ``summary()``.
+* :mod:`repro.obs.metrics` — named monotonic counters + histograms with
+  ``snapshot()``/``reset()`` and order-independent ``scope()`` deltas.
+* :mod:`repro.obs.report`  — per-phase attribution tables
+  (select/plan/convert/kernel/exchange/solver) from a live or exported
+  trace, plus the distributed exchange-overlap table from
+  ``BENCH_obs.json``. CLI: ``python -m repro.obs.report``.
+
+:func:`repro.obs.provenance.env_info` records run provenance (jax
+version, backend, devices, git rev) in every ``BENCH_*.json``.
+"""
+from repro.obs import metrics
+from repro.obs import trace
+from repro.obs.provenance import env_info
+from repro.obs.trace import event, span, tracing
+
+__all__ = ["metrics", "trace", "span", "event", "tracing", "env_info"]

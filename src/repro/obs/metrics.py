@@ -1,0 +1,125 @@
+"""Named monotonic counters and histograms for runtime decisions.
+
+Counters are always on (one dict update under a lock — nanoseconds, and
+only ever on host-side decision paths, never inside jitted device code).
+They answer the questions the tracer's spans cannot: *how many* times did
+each decision go each way over a whole run?
+
+Standard counter names (incremented by the instrumented layers):
+
+    planned_pulls            sanctioned symbolic-phase d2h transfers
+                             (``repro.core.convert._planned_pull``)
+    selection.cache_hit/.cache_miss
+                             SelectionCache decision lookups
+    kernel.route.pallas/.ref/.veto
+                             ``kernel_route`` outcomes (veto = a record
+                             exists but measured slower than ref)
+    replan.pattern_sig       memoised DistPlan format plans dropped
+                             because the live pattern changed
+    halo.bytes               bytes a traced ``dist_spmv`` exchanges per
+                             call (recorded at trace time)
+
+Standard histogram names (``observe``):
+
+    ell.padding_waste        1 - nnz/(m*k) of each planned ELL layout
+    hyb.padding_waste        same for the ELL part of each HYB plan
+
+``snapshot()`` returns a plain dict (JSON-ready); ``scope()`` gives tests
+an order-independent view: deltas against the values at scope entry, so
+assertions stop depending on what ran earlier in the process.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, Optional
+
+_LOCK = threading.Lock()
+_COUNTERS: Dict[str, float] = {}
+# name -> [count, sum, min, max]
+_HISTS: Dict[str, list] = {}
+
+
+def inc(name: str, n: float = 1) -> None:
+    """Increment counter ``name`` by ``n`` (created at 0 on first use)."""
+    with _LOCK:
+        _COUNTERS[name] = _COUNTERS.get(name, 0) + n
+
+
+def observe(name: str, value: float) -> None:
+    """Record ``value`` into histogram ``name`` (count/sum/min/max)."""
+    v = float(value)
+    with _LOCK:
+        h = _HISTS.setdefault(name, [0, 0.0, float("inf"), float("-inf")])
+        h[0] += 1
+        h[1] += v
+        h[2] = min(h[2], v)
+        h[3] = max(h[3], v)
+
+
+def value(name: str, default: float = 0) -> float:
+    """Current value of counter ``name``."""
+    with _LOCK:
+        return _COUNTERS.get(name, default)
+
+
+def snapshot() -> dict:
+    """JSON-ready snapshot: ``{"counters": {...}, "histograms": {...}}``."""
+    with _LOCK:
+        return {
+            "counters": dict(_COUNTERS),
+            "histograms": {
+                name: {"count": h[0], "sum": h[1], "min": h[2], "max": h[3],
+                       "mean": h[1] / max(1, h[0])}
+                for name, h in _HISTS.items()},
+        }
+
+
+def reset(names: Optional[Iterable[str]] = None) -> None:
+    """Zero counters and histograms (all, or just ``names``)."""
+    with _LOCK:
+        if names is None:
+            _COUNTERS.clear()
+            _HISTS.clear()
+        else:
+            for n in names:
+                _COUNTERS.pop(n, None)
+                _HISTS.pop(n, None)
+
+
+class Scope:
+    """Delta view of the counters since scope entry (see :func:`scope`)."""
+
+    def __init__(self):
+        with _LOCK:
+            self._base = dict(_COUNTERS)
+
+    def delta(self, name: str) -> float:
+        """Counter growth since the scope opened."""
+        return value(name) - self._base.get(name, 0)
+
+    def deltas(self) -> Dict[str, float]:
+        """All counters that moved since the scope opened."""
+        with _LOCK:
+            cur = dict(_COUNTERS)
+        out = {}
+        for name, v in cur.items():
+            d = v - self._base.get(name, 0)
+            if d:
+                out[name] = d
+        return out
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+def scope() -> Scope:
+    """``with metrics.scope() as s: ...; s.delta("planned_pulls")``.
+
+    The scope never mutates the global counters, so nested/concurrent
+    scopes and unrelated earlier activity cannot perturb each other —
+    the fix for order-dependent transfer-count assertions.
+    """
+    return Scope()

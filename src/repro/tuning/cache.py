@@ -34,6 +34,7 @@ import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.formats import Format
+from repro.obs import metrics as _metrics
 from repro.tuning.features import PatternFeatures
 
 CACHE_PATH_ENV = "REPRO_TUNING_CACHE"
@@ -177,8 +178,12 @@ class SelectionCache:
     def get(self, key: str) -> Optional[Format]:
         value = self._load().get(key)
         if value is None:
+            _metrics.inc("selection.cache_miss")
             return None
-        return decode_decision(value)[0]
+        fmt = decode_decision(value)[0]
+        _metrics.inc("selection.cache_hit" if fmt is not None
+                     else "selection.cache_miss")
+        return fmt
 
     def put(self, key: str, fmt: Format) -> None:
         self._load()[key] = Format(fmt).name
@@ -192,10 +197,13 @@ class SelectionCache:
                                                        Optional[str]]]:
         value = self._load().get(key)
         if value is None:
+            _metrics.inc("selection.cache_miss")
             return None
         fmt, backend, cfg, tag = decode_decision(value)
         if fmt is None:
+            _metrics.inc("selection.cache_miss")
             return None  # stale/corrupt entry — treat as a miss
+        _metrics.inc("selection.cache_hit")
         return fmt, backend, cfg, tag
 
     def put_decision(self, key: str, fmt: Format,

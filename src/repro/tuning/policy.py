@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.convert import (SwitchPlan, plan_switch as _plan_switch,
                                 to_coo as _to_coo_fn)
+from repro.obs import trace as _trace
 from repro.core.dynamic import DEFAULT_CANDIDATES, DynamicMatrix
 from repro.core.formats import Format
 from repro.tuning.cache import SelectionCache
@@ -84,6 +85,15 @@ class FormatPolicy:
 
         ``x`` is only used by profile mode (synthesized as ones when absent).
         """
+        if _trace.mode() == "off":
+            return self._select(A, x)
+        with _trace.span("select.policy", mode=self.mode) as sp:
+            rep = self._select(A, x)
+            sp.set(chosen=Format(rep.best).name, tier=rep.mode,
+                   backend=rep.backend or "auto")
+        return rep
+
+    def _select(self, A, x=None) -> TuneReport:
         A = A.concrete if isinstance(A, DynamicMatrix) else A
         if self.mode == "profile":
             if x is None:
@@ -136,7 +146,12 @@ class FormatPolicy:
         """
         A = A.concrete if isinstance(A, DynamicMatrix) else A
         nparts = int(jax.tree_util.tree_leaves(A)[0].shape[0])
+        if _trace.mode() != "off":
+            with _trace.span("select.batch", mode=self.mode, parts=nparts):
+                return self._select_batch(A, x, nparts)
+        return self._select_batch(A, x, nparts)
 
+    def _select_batch(self, A, x, nparts: int) -> np.ndarray:
         if self.mode == "profile":
             ids = [self.candidates.index(
                 self.select(jax.tree.map(lambda a, i=i: a[i], A), x=x).best)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import Format, hpcg, random_coo, to_dense_np
-from repro.core.convert import (convert_execute_batch, planned_pull_count,
+from repro.core.convert import (convert_execute_batch, planned_pulls_scope,
                                 plan_switch_batch)
 from repro.core.distributed import (DistPlan, build_dist_matrix, dist_spmv,
                                     distribute_vector, partition_coo,
@@ -154,8 +154,10 @@ def test_batched_build_constant_planned_pulls():
         cache = SelectionCache(os.path.join(tempfile.mkdtemp(), "sel.json"))
         policy = FormatPolicy("cached", candidates=candidates, cache=cache)
         plan = plan_partition(prob.row, prob.col, prob.val, prob.shape, nshards)
-        before = planned_pull_count()
-        with jax.transfer_guard_device_to_host("disallow"):
+        # planned_pulls_scope: order-independent count of the pulls this
+        # block performs, regardless of what ran earlier in the suite
+        with planned_pulls_scope() as scope, \
+                jax.transfer_guard_device_to_host("disallow"):
             local, remote = partition_execute_jit(prob.row, prob.col,
                                                   prob.val, plan=plan)
             for part in (local, remote):
@@ -165,7 +167,7 @@ def test_batched_build_constant_planned_pulls():
                     sp = plan_switch_batch(part, fmt)
                     out = convert_execute_batch(part, sp)
                     jax.block_until_ready(jax.tree_util.tree_leaves(out))
-        pulls[nshards] = planned_pull_count() - before
+        pulls[nshards] = scope.count
     assert pulls[2] == pulls[8], pulls
 
 

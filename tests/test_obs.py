@@ -1,0 +1,332 @@
+"""repro.obs: tracer, metrics, report, provenance, solver history."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Format, hpcg
+from repro.core.convert import convert, planned_pulls_scope
+from repro.core.ops import spmv
+from repro.core.solvers import cg, cg_fixed_iters, pcg
+from repro.obs import metrics, trace
+from repro.obs import report
+from repro.obs.provenance import env_info
+
+
+@pytest.fixture(autouse=True)
+def _clean_trace():
+    """Each test starts from an empty trace in the mode the env dictates."""
+    trace.clear()
+    yield
+    trace.clear()
+
+
+# ---------------------------------------------------------------------------
+# Tracer core
+# ---------------------------------------------------------------------------
+
+
+def test_spans_nest_and_record_parentage():
+    with trace.tracing("full"):
+        with trace.span("build.outer", kind="t") as outer:
+            with trace.span("plan.inner") as inner:
+                pass
+            trace.event("kernel.route", route="ref")
+    evs = {e["name"]: e for e in trace.events()}
+    assert set(evs) == {"build.outer", "plan.inner", "kernel.route"}
+    assert evs["build.outer"]["parent"] is None
+    assert evs["plan.inner"]["parent"] == evs["build.outer"]["id"]
+    # the event fired while build.outer was still open -> it is a child too
+    assert evs["kernel.route"]["parent"] == evs["build.outer"]["id"]
+    assert inner.id != outer.id
+    # durations: the parent covers the child
+    assert evs["build.outer"]["dur"] >= evs["plan.inner"]["dur"]
+
+
+def test_summary_mode_aggregates_without_ring():
+    with trace.tracing("summary"):
+        for _ in range(3):
+            with trace.span("select.policy"):
+                pass
+    assert trace.events() == []  # no per-event storage in summary mode
+    agg = trace.aggregate()
+    assert agg["select.policy"]["count"] == 3
+    assert "select.policy" in trace.summary()
+
+
+def test_off_mode_emits_nothing_and_never_touches_jax(monkeypatch):
+    """The REPRO_TRACE=off hot path must not record, sync, or import-touch
+    jax: sp.sync() on the null span is a pure no-op."""
+    def _boom(*a, **k):  # any block_until_ready call would be a sync leak
+        raise AssertionError("block_until_ready called on the off path")
+
+    monkeypatch.setattr(jax, "block_until_ready", _boom)
+    trace.set_mode("off")
+    y = jnp.arange(4.0)
+    with jax.transfer_guard("disallow"):
+        with trace.span("kernel.anything", x=1) as sp:
+            sp.sync(y)
+            sp.set(a=2)
+        trace.event("kernel.evt")
+    assert trace.events() == []
+    assert trace.aggregate() == {}
+    # the off span is one shared singleton — no allocation per call
+    assert trace.span("a") is trace.span("b")
+
+
+def test_tracing_scope_restores_mode():
+    trace.set_mode("off")
+    with trace.tracing("full"):
+        assert trace.mode() == "full"
+        with trace.tracing("summary"):
+            assert trace.mode() == "summary"
+        assert trace.mode() == "full"
+    assert trace.mode() == "off"
+
+
+def test_export_chrome_roundtrip(tmp_path):
+    with trace.tracing("full"):
+        with trace.span("solver.solve", precond="mg") as sp:
+            with trace.span("exchange.dist_spmv"):
+                pass
+    path = trace.export_chrome(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert all(e["ph"] == "X" for e in doc["traceEvents"])
+    evs = report.load_trace(path)
+    assert {e["name"] for e in evs} == {"solver.solve", "exchange.dist_spmv"}
+    child = next(e for e in evs if e["name"] == "exchange.dist_spmv")
+    parent = next(e for e in evs if e["name"] == "solver.solve")
+    assert child["parent"] == parent["id"]
+    assert parent["args"]["precond"] == "mg"  # ids popped out of args
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_snapshot_reset_roundtrip():
+    metrics.reset(["t.a", "t.b", "t.h"])
+    metrics.inc("t.a")
+    metrics.inc("t.a", 2)
+    metrics.inc("t.b", 5)
+    metrics.observe("t.h", 0.25)
+    metrics.observe("t.h", 0.75)
+    snap = metrics.snapshot()
+    assert snap["counters"]["t.a"] == 3
+    assert snap["counters"]["t.b"] == 5
+    h = snap["histograms"]["t.h"]
+    assert (h["count"], h["sum"], h["min"], h["max"]) == (2, 1.0, 0.25, 0.75)
+    assert h["mean"] == 0.5
+    json.dumps(snap)  # JSON-ready
+    metrics.reset(["t.a"])
+    assert metrics.value("t.a") == 0
+    assert metrics.value("t.b") == 5  # scoped reset leaves others alone
+    metrics.reset(["t.b", "t.h"])
+
+
+def test_metrics_scope_is_order_independent():
+    metrics.inc("t.scope", 100)  # unrelated earlier activity
+    with metrics.scope() as s:
+        metrics.inc("t.scope", 3)
+        assert s.delta("t.scope") == 3
+    # a second scope sees only its own window, not the 103 before it
+    with metrics.scope() as s2:
+        assert s2.delta("t.scope") == 0
+        metrics.inc("t.scope")
+        assert s2.deltas() == {"t.scope": 1}
+    metrics.reset(["t.scope"])
+
+
+def test_planned_pulls_scope_counts_only_inside():
+    A = jnp.zeros((4, 4)).at[0, 0].set(1.0)
+    from repro.core.formats import Dense
+    D = Dense(A, (4, 4), 16)
+    convert(D, Format.COO)  # pulls before the scope must not count
+    with planned_pulls_scope() as s:
+        before = s.count
+        convert(D, Format.COO)
+        assert s.count > before
+    first = s.count
+    convert(D, Format.COO)  # pulls after the scope must not count either
+    assert s.count == first
+
+
+# ---------------------------------------------------------------------------
+# Instrumented layers, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_hpcg_trace_contains_phases_with_sane_parentage():
+    """An hpcg build + multiformat selection + auto-routed solve leaves
+    select/plan/convert/kernel spans in the trace, with every recorded
+    parent id belonging to a recorded span."""
+    from repro.core.distributed import build_dist_matrix, distribute_vector
+    from repro.core.solvers import operator
+
+    with trace.tracing("full"):
+        trace.clear()
+        prob = hpcg.generate_problem(4, 4, 4)
+        mesh = jax.make_mesh((1,), ("rows",))
+        A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape,
+                              mesh, "rows", mode="multiformat",
+                              tune="analytic")
+        b = distribute_vector(hpcg.rhs_for_ones(prob), mesh, "rows")
+        res = jax.block_until_ready(
+            cg(operator(A, mesh, backend="auto"), b, tol=1e-6, maxiter=50))
+        evs = trace.events()
+    assert float(res.resnorm) < 1e-3
+    phases = {report.phase_of(e["name"]) for e in evs}
+    assert {"select", "plan", "convert", "kernel", "build"} <= phases, phases
+    ids = {e["id"] for e in evs}
+    by_id = {e["id"]: e for e in evs}
+    for e in evs:
+        if e["parent"] is not None and e["parent"] in ids:
+            parent = by_id[e["parent"]]
+            # a child span starts no earlier than its parent
+            assert e["ts"] >= parent["ts"] - 1e-3, (e, parent)
+    # the build.dist span must be an ancestor of at least one plan span
+    build_ids = {e["id"] for e in evs if e["name"] == "build.dist"}
+    assert any(e["parent"] in build_ids for e in evs
+               if e["name"].startswith(("plan.", "select.", "convert.")))
+
+
+def test_selection_cache_counters(tmp_path):
+    from repro.tuning.cache import SelectionCache
+    from repro.tuning.policy import FormatPolicy
+    from repro.core import random_coo
+
+    C = random_coo(0, (32, 32), 0.1)
+    cache = SelectionCache(str(tmp_path / "sel.json"))
+    policy = FormatPolicy("cached", cache=cache)
+    with metrics.scope() as s:
+        policy.select(C)
+        assert s.delta("selection.cache_miss") == 1
+        policy.select(C)
+        assert s.delta("selection.cache_hit") == 1
+
+
+def test_kernel_route_counters():
+    from repro.core.ops import kernel_route
+    from repro.core import random_coo
+
+    A = convert(random_coo(1, (64, 64), 0.1), Format.CSR)
+    with metrics.scope() as s:
+        route, cfg = kernel_route(A)  # empty cache: unmeasured -> ref
+        assert route in ("ref", "pallas")
+        deltas = s.deltas()
+    assert any(k.startswith("kernel.route.") for k in deltas), deltas
+
+
+def test_padding_waste_histograms():
+    from repro.core import random_coo
+
+    metrics.reset(["ell.padding_waste", "hyb.padding_waste"])
+    C = random_coo(3, (64, 64), 0.05)
+    convert(C, Format.ELL)
+    convert(C, Format.HYB)
+    snap = metrics.snapshot()["histograms"]
+    assert snap["ell.padding_waste"]["count"] == 1
+    assert 0.0 <= snap["ell.padding_waste"]["max"] <= 1.0
+    assert snap["hyb.padding_waste"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+
+def test_attribution_self_time():
+    evs = [
+        {"name": "build.dist", "ts": 0.0, "dur": 100.0, "tid": 1, "id": 1,
+         "parent": None, "args": {}},
+        {"name": "plan.partition", "ts": 10.0, "dur": 30.0, "tid": 1, "id": 2,
+         "parent": 1, "args": {}},
+        {"name": "convert.execute", "ts": 50.0, "dur": 50.0, "tid": 1, "id": 3,
+         "parent": 1, "args": {}},
+    ]
+    rows = {r["phase"]: r for r in report.attribution(evs)}
+    assert rows["build"]["self_ms"] == pytest.approx(0.020)  # 100-30-50 us
+    assert rows["plan"]["self_ms"] == pytest.approx(0.030)
+    assert rows["convert"]["self_ms"] == pytest.approx(0.050)
+    assert sum(r["share"] for r in rows.values()) == pytest.approx(1.0)
+    assert "build" in report.render_attribution(list(rows.values()))
+
+
+def test_overlap_rows_from_bench_doc():
+    doc = {"rows": [
+        {"name": "obs_overlap_ghost_p4", "us_per_call": 120.0,
+         "derived": "local_us=100;exch_us=60;hidden_us=40;hidden_frac=0.667"},
+        {"name": "obs_overlap_ghost_p8", "us_per_call": 180.0,
+         "derived": "local_us=100;exch_us=80;hidden_us=0;hidden_frac=0.0"},
+        {"name": "scaling_spmv_ghost_p8", "us_per_call": 1.0, "derived": ""},
+    ]}
+    rows = report.overlap_rows(doc)
+    assert [r["p"] for r in rows] == [4, 8]
+    text = report.render_overlap(rows)
+    assert "hidden" in text and "ghost" in text
+
+
+def test_report_cli_renders(tmp_path, capsys):
+    with trace.tracing("full"):
+        with trace.span("solver.solve"):
+            with trace.span("kernel.spmv"):
+                pass
+    path = str(tmp_path / "t.json")
+    trace.export_chrome(path)
+    assert report.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "solver" in out and "kernel" in out
+
+
+# ---------------------------------------------------------------------------
+# Provenance + solver history
+# ---------------------------------------------------------------------------
+
+
+def test_env_info_shape():
+    info = env_info()
+    assert info["jax_version"] == jax.__version__
+    assert info["backend"] == jax.default_backend()
+    assert info["device_count"] >= 1
+    json.dumps(info)
+
+
+def test_cg_history_fixed_size_and_monotone_tail():
+    prob = hpcg.generate_problem(4, 4, 4)
+    A = convert(hpcg.to_coo(prob), Format.CSR)
+    b = hpcg.rhs_for_ones(prob)
+    res = jax.block_until_ready(
+        cg(lambda v: spmv(A, v), b, tol=1e-8, maxiter=40))
+    hist = np.asarray(res.history)
+    assert hist.shape == (41,)  # maxiter + 1, regardless of convergence
+    k = int(res.iters)
+    assert hist[0] > 0
+    assert np.isfinite(hist[:k + 1]).all()
+    assert np.isnan(hist[k + 1:]).all()  # untouched tail stays NaN
+    assert hist[k] == pytest.approx(float(res.resnorm), rel=1e-4)
+
+
+def test_pcg_and_fixed_iters_history():
+    prob = hpcg.generate_problem(4, 4, 4)
+    A = convert(hpcg.to_coo(prob), Format.CSR)
+    b = hpcg.rhs_for_ones(prob)
+    diag = jnp.full((prob.shape[0],), 26.0, jnp.float32)
+    res = jax.block_until_ready(
+        pcg(lambda v: spmv(A, v), b, diag, tol=1e-8, maxiter=30))
+    hist = np.asarray(res.history)
+    assert hist.shape == (31,)
+    assert hist[int(res.iters)] == pytest.approx(float(res.resnorm), rel=1e-4)
+
+    res = jax.block_until_ready(
+        cg_fixed_iters(lambda v: spmv(A, v), b, iters=7))
+    hist = np.asarray(res.history)
+    assert hist.shape == (8,)
+    assert np.isfinite(hist).all()
+    assert hist[-1] == pytest.approx(float(res.resnorm), rel=1e-4)
