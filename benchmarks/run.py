@@ -34,6 +34,12 @@ import json
 import os
 import sys
 
+# Backend-gated XLA flags must land before any jax import in this process
+# (the bench subprocesses run their own env.apply with forced host devices).
+from repro import env as _env
+
+_env.apply()
+
 SPMV_SUITES = ("overhead", "formats", "kernels")
 CONVERT_SUITES = ("convert", "switch")
 DIST_SUITES = ("scaling",)
@@ -146,14 +152,16 @@ def main(argv=None):
             ((8, 8, 8), (16, 16, 16), (24, 24, 24))),
         "kernels": bench_kernels,
         "scaling": lambda: bench_scaling.run(
-            (1, 2, 4, 8), grid=(8, 8, 16), iters=10) if args.quick else
-            bench_scaling.run((1, 2, 4, 8)),
+            (1, 2, 4, 8), grid=(8, 8, 16), iters=10,
+            restart_shards=(4,)) if args.quick else
+            bench_scaling.run((1, 2, 4, 8, 16, 32)),
         "hpcg": lambda: bench_hpcg.run(
             grids=((8, 8, 8),), iters=1) if args.quick else
             bench_hpcg.run(),
         "obs": lambda: bench_obs.run(
-            (1, 2, 4), grid=(8, 8, 16), iters=10) if args.quick else
-            bench_obs.run((1, 2, 4, 8)),
+            (1, 2, 4), grid=(8, 8, 16), iters=10,
+            attempts=1) if args.quick else
+            bench_obs.run((1, 2, 4, 8, 16, 32)),
     }
     results = {}
     print("name,us_per_call,derived")

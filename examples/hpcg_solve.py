@@ -20,10 +20,14 @@ import os
 import sys
 import time
 
-if __name__ == "__main__" and os.environ.get("HPCG_DEVICES"):
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={os.environ['HPCG_DEVICES']} "
-        + os.environ.get("XLA_FLAGS", ""))
+if __name__ == "__main__":
+    # repro.env is jax-free: backend-gated XLA flags land before jax
+    # initializes (async collectives on GPU, forced host devices for SPMD)
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(_here, "..", "src"))
+    from repro import env as _env
+
+    _env.apply(host_devices=int(os.environ.get("HPCG_DEVICES", 0)) or None)
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
@@ -103,8 +107,10 @@ def main(argv=None):
         print(f"optimization: {hier} ({time.perf_counter() - t0:.2f}s)")
         if args.mode == "multiformat":
             for rec in hier.formats():
+                bnd = (f" boundary={rec['boundary']}"
+                       if "boundary" in rec else "")
                 print(f"  level {rec['level']} {rec['dims']}: "
-                      f"local={rec['local']} remote={rec['remote']}")
+                      f"local={rec['local']}{bnd} remote={rec['remote']}")
     else:
         plan = hpcg.slab_plan(prob, ndev) if prob.nz % ndev == 0 else None
         A = build_dist_matrix(prob.row, prob.col, prob.val, prob.shape, mesh,
@@ -115,8 +121,12 @@ def main(argv=None):
         if args.mode == "multiformat":
             from repro.core import DEFAULT_CANDIDATES
             names = [f.name for f in DEFAULT_CANDIDATES]
-            print("  per-shard local formats: ",
+            label = "interior" if A.split else "local"
+            print(f"  per-shard {label} formats: ",
                   [names[i] for i in np.asarray(A.local.active_id)])
+            if A.split:
+                print("  per-shard boundary formats:",
+                      [names[i] for i in np.asarray(A.boundary.active_id)])
             print("  per-shard remote formats:",
                   [names[i] for i in np.asarray(A.remote.active_id)])
 

@@ -224,6 +224,28 @@ class SwitchPlan:
     def __post_init__(self):
         object.__setattr__(self, "target", Format(self.target))
 
+    def to_json(self) -> dict:
+        """JSON-ready dict (Format by name, tuples as lists) — the on-disk
+        half of persistent plan caching (``distplan:`` namespace)."""
+        out = {"target": Format(self.target).name}
+        for f in dataclasses.fields(self):
+            if f.name == "target":
+                continue
+            v = getattr(self, f.name)
+            if v is not None:
+                out[f.name] = list(v) if isinstance(v, tuple) else v
+        return out
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "SwitchPlan":
+        kw = {"target": Format[doc["target"]]}
+        for f in dataclasses.fields(cls):
+            if f.name == "target" or f.name not in doc:
+                continue
+            v = doc[f.name]
+            kw[f.name] = tuple(v) if isinstance(v, list) else v
+        return cls(**kw)
+
 
 def _live_row_counts(C: COO, live) -> jax.Array:
     """Per-row count of live (non-zero) entries, on device."""

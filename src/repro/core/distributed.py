@@ -8,10 +8,17 @@ The paper's MPI design, mapped to JAX SPMD:
     the regular part) and a **remote** rectangular block (columns owned by
     neighbours — the irregular part), each an independently-formatted
     dynamic matrix (the paper's key distributed observation);
-  * SpMV = local SpMV + remote SpMV over halo values obtained by
-    ``ExchangeHalo`` — here a ``ppermute`` neighbour exchange (slab
-    partitions: stencil matrices) or an ``all_gather`` (general fallback),
-    issued *before* the local SpMV so the collective overlaps compute;
+  * the local block optionally splits further into **interior** rows (no
+    live remote entry — their results never touch the halo) and
+    **boundary** rows (the classic MPI overlap decomposition): the
+    interior SpMV is the compute the scheduler can run while the halo
+    collective is in flight, because *nothing* in it waits on the
+    exchange;
+  * SpMV = interior SpMV + boundary SpMV + remote SpMV over halo values
+    obtained by ``ExchangeHalo`` — here a ``ppermute`` neighbour exchange
+    (slab partitions: stencil matrices) or an ``all_gather`` (general
+    fallback), issued *before* the interior SpMV so the collective
+    overlaps compute;
   * per-shard format selection ("Multi-Format") uses ``SwitchDynamicMatrix``:
     one SPMD program, ``lax.switch`` on a per-shard format id.
 
@@ -95,13 +102,21 @@ class DistSparseMatrix:
     ``remote_empty`` marks a statically block-diagonal partition: the
     remote part carries no entries, so SpMV skips both the exchange and
     the remote term entirely.
+
+    With the overlap split (``build_dist_matrix(split=...)``), ``local``
+    holds only the **interior** rows (no live remote entry) and
+    ``boundary`` holds the rest of the local block — both (mp, mp), their
+    entry sets disjoint and together exactly the unsplit local block.
+    ``boundary is None`` means the matrix is unsplit and ``local`` is the
+    whole local block.
     """
 
     def __init__(self, local, remote, *, nshards: int, mp: int, shape,
                  axis: AxisNames, halo_mode: str, hw: int,
-                 remote_empty: bool = False):
+                 remote_empty: bool = False, boundary=None):
         self.local = local
         self.remote = remote
+        self.boundary = boundary
         self.nshards = nshards
         self.mp = mp
         self.shape = tuple(shape)
@@ -110,21 +125,29 @@ class DistSparseMatrix:
         self.hw = hw
         self.remote_empty = remote_empty
 
+    @property
+    def split(self) -> bool:
+        """True when local is interior-only and ``boundary`` carries the
+        halo-coupled rows (the overlap decomposition)."""
+        return self.boundary is not None
+
     def tree_flatten(self):
         meta = (self.nshards, self.mp, self.shape, self.axis, self.halo_mode,
                 self.hw, self.remote_empty)
-        return (self.local, self.remote), meta
+        return (self.local, self.remote, self.boundary), meta
 
     @classmethod
     def tree_unflatten(cls, meta, children):
         nshards, mp, shape, axis, halo_mode, hw, remote_empty = meta
-        return cls(children[0], children[1], nshards=nshards, mp=mp,
+        return cls(children[0], children[1], boundary=children[2],
+                   nshards=nshards, mp=mp,
                    shape=shape, axis=axis, halo_mode=halo_mode, hw=hw,
                    remote_empty=remote_empty)
 
-    def _replace_parts(self, local, remote) -> "DistSparseMatrix":
+    def _replace_parts(self, local, remote, boundary=None) -> "DistSparseMatrix":
         return DistSparseMatrix(
-            local, remote, nshards=self.nshards, mp=self.mp, shape=self.shape,
+            local, remote, boundary=self.boundary if boundary is None else boundary,
+            nshards=self.nshards, mp=self.mp, shape=self.shape,
             axis=self.axis, halo_mode=self.halo_mode, hw=self.hw,
             remote_empty=self.remote_empty)
 
@@ -132,8 +155,11 @@ class DistSparseMatrix:
         lf = type(self.local).__name__
         rf = type(self.remote).__name__
         halo = "empty" if self.remote_empty else f"{self.halo_mode}:{self.hw}"
+        parts = f"local={lf}"
+        if self.split:
+            parts += f", boundary={type(self.boundary).__name__}"
         return (f"DistSparseMatrix(shape={self.shape}, P={self.nshards}, "
-                f"local={lf}, remote={rf}, halo={halo})")
+                f"{parts}, remote={rf}, halo={halo})")
 
 
 # ---------------------------------------------------------------------------
@@ -151,16 +177,27 @@ def _exchange_neighbor(x_blk, hw: int, axis: AxisNames, nshards: int):
 
 
 def _shard_spmv(local, remote, x_blk, hw: int, axis: AxisNames, nshards: int,
-                halo_mode: str, backend: str, remote_empty: bool, cfg=None):
+                halo_mode: str, backend: str, remote_empty: bool, cfg=None,
+                boundary=None):
     """Per-shard SpMV body: y = A_local x_local + A_remote x_halo.
 
     The halo collective is issued *before* the local SpMV: it has no data
     dependency on it, so XLA's latency-hiding scheduler overlaps the
     exchange with the local compute (the paper's communication/computation
     overlap). A statically-empty remote part skips both entirely.
+
+    With the interior/boundary split (``boundary is not None``), ``local``
+    is the interior part: its entire SpMV — compute *and* result rows — is
+    independent of the collective, so the scheduler has a dependency-free
+    region exactly as wide as the interior work to hide the exchange in.
+    The boundary and remote terms, whose result rows genuinely wait on the
+    halo, are summed last.
     """
     if remote_empty:
-        return _ops.spmv(local, x_blk, backend=backend, cfg=cfg)
+        y = _ops.spmv(local, x_blk, backend=backend, cfg=cfg)
+        if boundary is not None:
+            y = y + _ops.spmv(boundary, x_blk, backend=backend, cfg=cfg)
+        return y
     if halo_mode == "neighbor":
         halo = _exchange_neighbor(x_blk, hw, axis, nshards)
     elif halo_mode == "gather":
@@ -168,6 +205,8 @@ def _shard_spmv(local, remote, x_blk, hw: int, axis: AxisNames, nshards: int,
     else:
         raise ValueError(halo_mode)
     y = _ops.spmv(local, x_blk, backend=backend, cfg=cfg)
+    if boundary is not None:
+        y = y + _ops.spmv(boundary, x_blk, backend=backend, cfg=cfg)
     return y + _ops.spmv(remote, halo, backend=backend, cfg=cfg)
 
 
@@ -185,6 +224,10 @@ def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "auto",
     program, so the decision is identical across shards of the same
     format branch. An explicit ``cfg`` (kernel tile-config dict) applies
     uniformly to every shard's SpMVs instead.
+
+    A split matrix (``A.boundary is not None``) runs the overlap schedule:
+    halo collective issued first, interior SpMV (``A.local``) while it is
+    in flight, boundary + remote last.
     """
     axis = A.axis
     if not A.remote_empty:
@@ -198,23 +241,35 @@ def dist_spmv(A: DistSparseMatrix, x, mesh: Mesh, backend: str = "auto",
         _metrics.inc("halo.bytes", A.nshards * halo_elems * itemsize)
         if _trace.mode() != "off":
             _trace.event("exchange.issue", mode=A.halo_mode, p=A.nshards,
-                         bytes=A.nshards * halo_elems * itemsize)
+                         bytes=A.nshards * halo_elems * itemsize,
+                         split=A.split)
 
-    def body(local_s, remote_s, x_blk):
-        return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,
-                           A.hw, axis, A.nshards, A.halo_mode, backend,
-                           A.remote_empty, cfg=cfg)
+    if A.split:
+        def body(local_s, boundary_s, remote_s, x_blk):
+            return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,
+                               A.hw, axis, A.nshards, A.halo_mode, backend,
+                               A.remote_empty, cfg=cfg,
+                               boundary=_unstack(boundary_s))
+        in_specs = (_part_spec(A.local, axis), _part_spec(A.boundary, axis),
+                    _part_spec(A.remote, axis), leading_axis_spec(axis, 1))
+        operands = (A.local, A.boundary, A.remote, x)
+    else:
+        def body(local_s, remote_s, x_blk):
+            return _shard_spmv(_unstack(local_s), _unstack(remote_s), x_blk,
+                               A.hw, axis, A.nshards, A.halo_mode, backend,
+                               A.remote_empty, cfg=cfg)
+        in_specs = (_part_spec(A.local, axis), _part_spec(A.remote, axis),
+                    leading_axis_spec(axis, 1))
+        operands = (A.local, A.remote, x)
 
     fn = compat.shard_map(
-        body, mesh=mesh,
-        in_specs=(_part_spec(A.local, axis), _part_spec(A.remote, axis),
-                  leading_axis_spec(axis, 1)),
+        body, mesh=mesh, in_specs=in_specs,
         out_specs=leading_axis_spec(axis, 1))
     if _trace.mode() == "off":
-        return fn(A.local, A.remote, x)
+        return fn(*operands)
     with _trace.span("exchange.dist_spmv", p=A.nshards,
                      halo="empty" if A.remote_empty else A.halo_mode) as sp:
-        y = fn(A.local, A.remote, x)
+        y = fn(*operands)
         sp.sync(y)
     return y
 
@@ -225,25 +280,42 @@ def dist_spmv_phase(A: DistSparseMatrix, x, mesh: Mesh, phase: str = "full",
 
     ``phase``:
       * ``"full"``      the production path (:func:`dist_spmv`);
-      * ``"local"``     local SpMV only — no halo collective is issued;
-      * ``"exchange"``  halo exchange + remote SpMV only — no local SpMV.
+      * ``"local"``     local SpMV only (interior + boundary when split) —
+                        no halo collective is issued;
+      * ``"exchange"``  halo exchange + remote SpMV only — no local SpMV;
+      * ``"interior"``  interior rows only (split matrices);
+      * ``"boundary"``  boundary rows only (split matrices).
 
-    Timing the three independently and comparing ``t_local + t_exchange``
+    Timing the phases independently and comparing ``t_local + t_exchange``
     against ``t_full`` measures how much of the exchange XLA's scheduler
     actually hid behind local compute (``hidden = local + exchange -
     full``); the per-shard-count sweep in ``benchmarks/bench_obs.py`` uses
-    this to localize where the ghost-mode p8 overlap is lost.
+    this to localize where the ghost-mode p8 overlap is lost. The
+    ``interior``/``boundary`` phases further attribute the local side of a
+    split matrix: the interior term is the overlap window's width.
     """
     if phase == "full":
         return dist_spmv(A, x, mesh, backend=backend, cfg=cfg)
-    if phase not in ("local", "exchange"):
-        raise ValueError(f"phase {phase!r} not in ('full', 'local', 'exchange')")
+    if phase not in ("local", "exchange", "interior", "boundary"):
+        raise ValueError(f"phase {phase!r} not in ('full', 'local', "
+                         f"'exchange', 'interior', 'boundary')")
+    if phase in ("interior", "boundary") and not A.split:
+        raise ValueError(f"phase {phase!r} needs a split matrix "
+                         "(build_dist_matrix(split=True))")
     axis = A.axis
 
-    def body(local_s, remote_s, x_blk):
+    def body(local_s, boundary_s, remote_s, x_blk):
         local, remote = _unstack(local_s), _unstack(remote_s)
-        if phase == "local":
+        boundary = _unstack(boundary_s) if boundary_s is not None else None
+        if phase == "interior":
             return _ops.spmv(local, x_blk, backend=backend, cfg=cfg)
+        if phase == "boundary":
+            return _ops.spmv(boundary, x_blk, backend=backend, cfg=cfg)
+        if phase == "local":
+            y = _ops.spmv(local, x_blk, backend=backend, cfg=cfg)
+            if boundary is not None:
+                y = y + _ops.spmv(boundary, x_blk, backend=backend, cfg=cfg)
+            return y
         if A.remote_empty:
             return jnp.zeros_like(x_blk)
         if A.halo_mode == "neighbor":
@@ -252,8 +324,19 @@ def dist_spmv_phase(A: DistSparseMatrix, x, mesh: Mesh, phase: str = "full",
             halo = jax.lax.all_gather(x_blk, axis, tiled=True)
         return _ops.spmv(remote, halo, backend=backend, cfg=cfg)
 
+    if A.split:
+        def body3(local_s, boundary_s, remote_s, x_blk):
+            return body(local_s, boundary_s, remote_s, x_blk)
+        in_specs = (_part_spec(A.local, axis), _part_spec(A.boundary, axis),
+                    _part_spec(A.remote, axis), leading_axis_spec(axis, 1))
+        fn = compat.shard_map(body3, mesh=mesh, in_specs=in_specs,
+                              out_specs=leading_axis_spec(axis, 1))
+        return fn(A.local, A.boundary, A.remote, x)
+
+    def body2(local_s, remote_s, x_blk):
+        return body(local_s, None, remote_s, x_blk)
     fn = compat.shard_map(
-        body, mesh=mesh,
+        body2, mesh=mesh,
         in_specs=(_part_spec(A.local, axis), _part_spec(A.remote, axis),
                   leading_axis_spec(axis, 1)),
         out_specs=leading_axis_spec(axis, 1))
@@ -298,6 +381,13 @@ class DistPlan:
     # only for triplets with the same live (val != 0) pattern; the builder
     # drops them and re-plans when the fingerprint no longer matches.
     pattern_sig: Optional[str] = None
+    # overlap split: shared capacities of the interior/boundary halves of
+    # the local block (live entries only), plus their memoised per-candidate
+    # format plans. None until a split build computes them.
+    interior_cap: Optional[int] = None
+    boundary_cap: Optional[int] = None
+    interior_plans: Optional[Tuple[SwitchPlan, ...]] = None
+    boundary_plans: Optional[Tuple[SwitchPlan, ...]] = None
 
     @property
     def remote_width(self) -> int:
@@ -312,6 +402,48 @@ class DistPlan:
     @property
     def remote_shape(self) -> Tuple[int, int]:
         return (self.mp, self.remote_width)
+
+    # -- persistence (the ``distplan:`` SelectionCache namespace) ----------
+
+    def to_json(self) -> str:
+        """Serialise the whole plan — partition caps, split caps, memoised
+        per-candidate SwitchPlans, pattern fingerprint — to one JSON
+        string, so a restarted job rebuilds with zero symbolic work."""
+        import json
+
+        doc = {"nshards": self.nshards, "mp": self.mp, "hw": self.hw,
+               "halo_mode": self.halo_mode, "shape": list(self.shape),
+               "local_cap": self.local_cap, "remote_cap": self.remote_cap,
+               "remote_empty": self.remote_empty,
+               "pattern_sig": self.pattern_sig,
+               "interior_cap": self.interior_cap,
+               "boundary_cap": self.boundary_cap}
+        if self.candidates is not None:
+            doc["candidates"] = [Format(f).name for f in self.candidates]
+        for name in ("local_plans", "remote_plans", "interior_plans",
+                     "boundary_plans"):
+            plans = getattr(self, name)
+            if plans is not None:
+                doc[name] = [p.to_json() for p in plans]
+        return json.dumps(doc, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "DistPlan":
+        import json
+
+        doc = json.loads(s)
+        kw = {k: doc[k] for k in ("nshards", "mp", "hw", "halo_mode",
+                                  "local_cap", "remote_cap", "remote_empty",
+                                  "pattern_sig", "interior_cap",
+                                  "boundary_cap")}
+        kw["shape"] = tuple(doc["shape"])
+        if "candidates" in doc:
+            kw["candidates"] = tuple(Format[n] for n in doc["candidates"])
+        for name in ("local_plans", "remote_plans", "interior_plans",
+                     "boundary_plans"):
+            if name in doc:
+                kw[name] = tuple(SwitchPlan.from_json(p) for p in doc[name])
+        return cls(**kw)
 
 
 def plan_partition(row, col, val, shape, nshards: int,
@@ -424,23 +556,102 @@ partition_execute_jit = jax.jit(partition_execute,
                                 static_argnames=("plan", "dtype"))
 
 
+# ---------------------------------------------------------------------------
+# Interior/boundary overlap split of the local block
+# ---------------------------------------------------------------------------
+
+
+def _split_caps(row, col, val, mp: int, nshards: int) -> Tuple[int, int]:
+    """Shared (interior, boundary) capacities — one vectorised host scan.
+
+    A row is *boundary* when it has at least one live remote entry (its
+    SpMV result waits on the halo); every other local row is *interior*.
+    Counting is over live (val != 0) local entries, matching the device
+    split, which drops dead entries.
+    """
+    row = np.asarray(row, np.int64)
+    col = np.asarray(col, np.int64)
+    live = np.asarray(val) != 0
+    shard = row // mp
+    local_mask = (col // mp) == shard
+    brow = np.zeros((mp * nshards,), bool)
+    brow[row[live & ~local_mask]] = True
+    loc_live = live & local_mask
+    is_b = brow[row] & loc_live
+    icounts = np.bincount(shard[loc_live & ~is_b], minlength=nshards)
+    bcounts = np.bincount(shard[is_b], minlength=nshards)
+    return (max(1, int(icounts.max(initial=0))),
+            max(1, int(bcounts.max(initial=0))))
+
+
+def split_local_execute(local: COO, remote: COO, mp: int, icap: int,
+                        bcap: int) -> Tuple[COO, COO]:
+    """Numeric phase of the overlap split (jit-able, caps static).
+
+    One extra stacked scatter over the already-partitioned local block:
+    per shard, rows with a live remote entry are flagged (one scatter-max
+    over the remote triplets), then every live local entry lands in the
+    interior or boundary container by a rank-within-mask scatter — the
+    same guard-slot pattern as :func:`partition_execute`. Dead (val == 0)
+    entries are dropped; both outputs keep the (mp, mp) local shape. Zero
+    device->host transfers.
+    """
+    def one(lrow, lcol, lval, rrow, rdata):
+        bflag = jnp.zeros((mp,), bool).at[rrow].max(rdata != 0)
+        live = lval != 0
+        outs = []
+        for mask, cap in (((~bflag[lrow]) & live, icap),
+                          (bflag[lrow] & live, bcap)):
+            rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+            ok = mask & (rank < cap)
+            dest = jnp.where(ok, jnp.minimum(rank, cap - 1), cap)
+            for x in (lrow, lcol, lval):
+                buf = jnp.zeros((cap + 1,), x.dtype).at[dest].set(
+                    jnp.where(ok, x, jnp.zeros((), x.dtype)))
+                outs.append(buf[:cap])
+        return tuple(outs)
+
+    ir, ic, iv, br, bc, bv = jax.vmap(one)(local.row, local.col, local.data,
+                                           remote.row, remote.data)
+    return (COO(ir, ic, iv, (mp, mp), icap), COO(br, bc, bv, (mp, mp), bcap))
+
+
+split_local_execute_jit = jax.jit(split_local_execute,
+                                  static_argnames=("mp", "icap", "bcap"))
+
+
 def plan_dist_formats(local: COO, remote: COO, plan: DistPlan,
-                      candidates: Sequence[Format]) -> DistPlan:
+                      candidates: Sequence[Format],
+                      boundary: Optional[COO] = None) -> DistPlan:
     """Attach the per-candidate :class:`SwitchPlan`\\ s to a DistPlan.
 
     One :func:`plan_switch_batch` pass per candidate per part; a plan that
     already carries matching format plans is returned unchanged (rebuilds
-    perform no symbolic pulls at all).
+    perform no symbolic pulls at all). With ``boundary`` (the overlap
+    split), ``local`` is the interior part and the plan memoises
+    ``interior_plans``/``boundary_plans`` instead of ``local_plans`` —
+    per-split multiformat selection needs per-split conversion plans.
     """
     candidates = tuple(Format(c) for c in candidates)
-    if plan.candidates == candidates and plan.local_plans is not None:
+    if boundary is None:
+        if plan.candidates == candidates and plan.local_plans is not None:
+            return plan
+        with _trace.span("plan.dist_formats",
+                         candidates=",".join(f.name for f in candidates)):
+            lplans = tuple(plan_switch_batch(local, f) for f in candidates)
+            rplans = tuple(plan_switch_batch(remote, f) for f in candidates)
+        return dataclasses.replace(plan, candidates=candidates,
+                                   local_plans=lplans, remote_plans=rplans)
+    if plan.candidates == candidates and plan.interior_plans is not None:
         return plan
-    with _trace.span("plan.dist_formats",
+    with _trace.span("plan.dist_formats", split=True,
                      candidates=",".join(f.name for f in candidates)):
-        lplans = tuple(plan_switch_batch(local, f) for f in candidates)
+        iplans = tuple(plan_switch_batch(local, f) for f in candidates)
+        bplans = tuple(plan_switch_batch(boundary, f) for f in candidates)
         rplans = tuple(plan_switch_batch(remote, f) for f in candidates)
     return dataclasses.replace(plan, candidates=candidates,
-                               local_plans=lplans, remote_plans=rplans)
+                               interior_plans=iplans, boundary_plans=bplans,
+                               remote_plans=rplans)
 
 
 def _pattern_sig(row, col, val) -> str:
@@ -454,7 +665,7 @@ def _pattern_sig(row, col, val) -> str:
     return h.hexdigest()
 
 
-def _check_plan_fits(row, col, plan: DistPlan) -> None:
+def _check_plan_fits(row, col, plan: DistPlan, val=None) -> None:
     """A reused plan must still fit the triplets.
 
     ``partition_execute``'s guard-slot scatter silently drops entries whose
@@ -462,7 +673,18 @@ def _check_plan_fits(row, col, plan: DistPlan) -> None:
     width would store out-of-range remote columns — both would corrupt the
     matrix with no error. One vectorised host scan (same cost class as
     ``plan_partition``) turns a stale plan into a loud failure instead.
+    With ``val`` and a plan carrying split capacities, the
+    interior/boundary scatter of :func:`split_local_execute` is validated
+    the same way (its counting is live-entry based, hence the values).
     """
+    if val is not None and plan.interior_cap is not None:
+        icap, bcap = _split_caps(row, col, val, plan.mp, plan.nshards)
+        if icap > plan.interior_cap or bcap > plan.boundary_cap:
+            raise ValueError(
+                f"stale DistPlan: split capacities (interior "
+                f"{plan.interior_cap}, boundary {plan.boundary_cap}) too "
+                f"small for these triplets (need {icap}/{bcap}); re-plan "
+                f"with plan_partition")
     row = np.asarray(row, np.int64)
     col = np.asarray(col, np.int64)
     mp = plan.mp
@@ -558,7 +780,9 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
                       dtype=jnp.float32,
                       plan: Optional[DistPlan] = None,
                       check_plan: bool = True,
-                      parts: Optional[Tuple[COO, COO]] = None) -> DistSparseMatrix:
+                      parts: Optional[Tuple[COO, COO]] = None,
+                      split: Union[str, bool] = "auto",
+                      plan_cache=None) -> DistSparseMatrix:
     """Build a distributed dynamic matrix (the paper's three versions).
 
     mode='uniform'      local/remote formats fixed (Morpheus & Ghost configs)
@@ -587,11 +811,41 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
     the stacked containers anyway (the MG hierarchy builder feeds them to
     the colored smoother) avoid running the device scatter twice.
     ``parts`` requires an explicit ``plan``.
+
+    ``split`` controls the interior/boundary overlap decomposition of the
+    local block: ``True`` forces it, ``False`` keeps the historical
+    two-part matrix, ``"auto"`` (default) splits exactly when a halo
+    exchange will actually be issued (``not remote_empty`` — a
+    block-diagonal matrix has nothing to hide the collective behind).
+
+    ``plan_cache`` (a ``repro.tuning.SelectionCache``) persists the fully
+    enriched :class:`DistPlan` under a ``distplan:`` key derived from the
+    live-pattern fingerprint, so a *restarted* process skips both the
+    partition host scan and all per-candidate symbolic conversion
+    planning: consulted only when ``plan`` is None, stored after every
+    planning build. Hits/misses count as ``distplan.cache_hit`` /
+    ``distplan.cache_miss``.
     """
     sizes = mesh.shape
     names = (axis,) if isinstance(axis, str) else tuple(axis)
     nshards = int(np.prod([sizes[a] for a in names]))
     axis = names if len(names) > 1 else names[0]
+
+    cache_key = None
+    if plan is None and plan_cache is not None:
+        sig = _pattern_sig(row, col, val)
+        m, n = shape
+        cache_key = f"distplan:{sig}|{m}x{n}|P{nshards}|{halo_mode}"
+        rec = plan_cache.get_raw(cache_key)
+        if rec is not None:
+            try:
+                plan = DistPlan.from_json(rec)
+            except (KeyError, ValueError):
+                plan = None  # unreadable/old record: fall through to planning
+        _metrics.inc("distplan.cache_hit" if plan is not None
+                     else "distplan.cache_miss")
+        if plan is not None:
+            _trace.event("plan.cache_hit", key=cache_key)
 
     if plan is None:
         plan = plan_partition(row, col, val, shape, nshards,
@@ -606,8 +860,9 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
             # rather than silently drop entries. check_plan=False skips it
             # for trusted analytic plans (e.g. hpcg.slab_plan) so the
             # triplets are touched only by the device scatter.
-            _check_plan_fits(row, col, plan)
-            if (plan.local_plans is not None
+            _check_plan_fits(row, col, plan, val=val)
+            if ((plan.local_plans is not None
+                 or plan.interior_plans is not None)
                     and plan.pattern_sig != _pattern_sig(row, col, val)):
                 # live pattern changed: the memoised format plans are void
                 _metrics.inc("replan.pattern_sig")
@@ -615,7 +870,14 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
                 plan = dataclasses.replace(plan, candidates=None,
                                            local_plans=None,
                                            remote_plans=None,
+                                           interior_plans=None,
+                                           boundary_plans=None,
                                            pattern_sig=None)
+    if split == "auto":
+        split = not plan.remote_empty
+    if split and plan.interior_cap is None:
+        icap, bcap = _split_caps(row, col, val, plan.mp, plan.nshards)
+        plan = dataclasses.replace(plan, interior_cap=icap, boundary_cap=bcap)
     if parts is not None:
         lcoos, rcoos = parts
         if (lcoos.shape != plan.local_shape
@@ -624,11 +886,14 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
                 f"parts shapes {lcoos.shape}/{rcoos.shape} do not match the "
                 f"plan's {plan.local_shape}/{plan.remote_shape}")
     else:
-        # strip the format plans / fingerprint for the partition jit key: a
-        # plan enriched by plan_dist_formats must hit the same
-        # partition_execute trace
+        # strip the format plans / fingerprint / split metadata for the
+        # partition jit key: a plan enriched by plan_dist_formats or the
+        # split-cap scan must hit the same partition_execute trace
         part_plan = dataclasses.replace(plan, candidates=None,
                                         local_plans=None, remote_plans=None,
+                                        interior_plans=None,
+                                        boundary_plans=None,
+                                        interior_cap=None, boundary_cap=None,
                                         pattern_sig=None)
         with _trace.span("build.partition_execute", p=plan.nshards) as sp:
             lcoos, rcoos = partition_execute_jit(np.asarray(row),
@@ -637,9 +902,21 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
                                                  plan=part_plan, dtype=dtype)
             sp.sync(lcoos.data, rcoos.data)
 
+    bcoos = None
+    if split:
+        with _trace.span("build.split_execute", p=plan.nshards) as sp:
+            lcoos, bcoos = split_local_execute_jit(
+                lcoos, rcoos, mp=plan.mp, icap=plan.interior_cap,
+                bcap=plan.boundary_cap)
+            sp.sync(lcoos.data, bcoos.data)
+
+    boundary = None
     if mode == "uniform":
         local = convert_execute_batch(
             lcoos, plan_switch_batch(lcoos, Format(local_format)))
+        if bcoos is not None:
+            boundary = convert_execute_batch(
+                bcoos, plan_switch_batch(bcoos, Format(local_format)))
         remote = convert_execute_batch(
             rcoos, plan_switch_batch(rcoos, Format(remote_format)))
     elif mode == "multiformat":
@@ -660,7 +937,8 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
             policy = FormatPolicy(pmode, candidates=candidates,
                                   profile_iters=3)
 
-        plan = plan_dist_formats(lcoos, rcoos, plan, candidates)
+        plan = plan_dist_formats(lcoos, rcoos, plan, candidates,
+                                 boundary=bcoos)
         if plan.pattern_sig is None:
             # stamp the live pattern the memoised format plans are valid for
             plan = dataclasses.replace(
@@ -668,22 +946,32 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
         # policy-candidate indices -> build-candidate (variant) indices
         remap = np.asarray([candidates.index(f) for f in policy.candidates],
                            np.int32)
+        lplans = plan.interior_plans if split else plan.local_plans
         lids, rids = remap[policy.select_batch(lcoos)], remap[policy.select_batch(rcoos)]
         local = SwitchDynamicMatrix.build_batched(
-            lcoos, candidates, plans=plan.local_plans, active_ids=lids)
+            lcoos, candidates, plans=lplans, active_ids=lids)
+        if bcoos is not None:
+            bids = remap[policy.select_batch(bcoos)]
+            boundary = SwitchDynamicMatrix.build_batched(
+                bcoos, candidates, plans=plan.boundary_plans, active_ids=bids)
         remote = SwitchDynamicMatrix.build_batched(
             rcoos, candidates, plans=plan.remote_plans, active_ids=rids)
     else:
         raise ValueError(mode)
 
-    A = DistSparseMatrix(local, remote, nshards=nshards, mp=plan.mp,
-                         shape=shape, axis=axis, halo_mode=plan.halo_mode,
-                         hw=plan.hw, remote_empty=plan.remote_empty)
+    A = DistSparseMatrix(local, remote, boundary=boundary, nshards=nshards,
+                         mp=plan.mp, shape=shape, halo_mode=plan.halo_mode,
+                         axis=axis, hw=plan.hw, remote_empty=plan.remote_empty)
     A = _shard_containers(A, mesh)
     # Build artifact (not pytree state): pass back via build(plan=...) and a
-    # rebuild performs zero symbolic pulls — partition caps and per-format
-    # SwitchPlans are all memoised.
+    # rebuild performs zero symbolic pulls — partition caps, split caps and
+    # per-format SwitchPlans are all memoised.
     A.plan = plan
+    if cache_key is not None and plan_cache is not None:
+        if plan.pattern_sig is None:
+            plan = dataclasses.replace(plan, pattern_sig=sig)
+            A.plan = plan
+        plan_cache.put_raw(cache_key, plan.to_json())
     return A
 
 
@@ -700,11 +988,19 @@ def _shard_containers(A: DistSparseMatrix, mesh: Mesh) -> DistSparseMatrix:
                 lambda a: jax.device_put(
                     a, NamedSharding(mesh, leading_axis_spec(axis, a.ndim))), t)
 
-    return A._replace_parts(put(A.local), put(A.remote))
+    return A._replace_parts(put(A.local), put(A.remote),
+                            boundary=put(A.boundary) if A.split else None)
 
 
 def activate_dist(A: DistSparseMatrix, part: str, fmt_or_ids) -> DistSparseMatrix:
-    """Runtime format switch of the local or remote part (paper activate())."""
+    """Runtime format switch of the local, boundary or remote part
+    (paper activate())."""
+    if part not in ("local", "boundary", "remote"):
+        raise ValueError(f"part {part!r} not in ('local', 'boundary', "
+                         f"'remote')")
+    if part == "boundary" and not A.split:
+        raise ValueError("matrix has no boundary part "
+                         "(build_dist_matrix(split=True))")
     tgt = getattr(A, part)
     if isinstance(tgt, SwitchDynamicMatrix):
         if isinstance(fmt_or_ids, Format):
@@ -719,8 +1015,11 @@ def activate_dist(A: DistSparseMatrix, part: str, fmt_or_ids) -> DistSparseMatri
     else:
         raise TypeError("uniform-mode parts switch via build (conversion); "
                         "use mode='multiformat' for runtime switching")
-    return (A._replace_parts(new, A.remote) if part == "local"
-            else A._replace_parts(A.local, new))
+    if part == "local":
+        return A._replace_parts(new, A.remote)
+    if part == "boundary":
+        return A._replace_parts(A.local, A.remote, boundary=new)
+    return A._replace_parts(A.local, new)
 
 
 # ---------------------------------------------------------------------------

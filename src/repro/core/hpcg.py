@@ -85,7 +85,7 @@ def slab_plan(prob: HPCGProblem, nshards: int) -> "DistPlan":
     ``check_plan=True`` the builder additionally runs its one-pass
     stale-plan validation scan on host.
     """
-    from repro.core.distributed import DistPlan
+    from repro.core.distributed import DistPlan, _split_caps
 
     n = prob.shape[0]
     if nshards <= 0 or prob.nz % nshards:
@@ -97,12 +97,17 @@ def slab_plan(prob: HPCGProblem, nshards: int) -> "DistPlan":
     lcounts = np.bincount(shard[local_mask], minlength=nshards)
     rcounts = np.bincount(shard[~local_mask], minlength=nshards)
     remote_empty = nshards == 1
+    # interior/boundary overlap caps (boundary = the slab's first/last x-y
+    # planes): computed here so a split build skips its own host scan.
+    icap, bcap = (None, None) if remote_empty else _split_caps(
+        prob.row, prob.col, prob.val, mp, nshards)
     return DistPlan(nshards=nshards, mp=mp,
                     hw=0 if remote_empty else prob.nx * prob.ny,
                     halo_mode="neighbor", shape=prob.shape,
                     local_cap=max(1, int(lcounts.max())),
                     remote_cap=max(1, int(rcounts.max())),
-                    remote_empty=remote_empty)
+                    remote_empty=remote_empty,
+                    interior_cap=icap, boundary_cap=bcap)
 
 
 def partition_problem(prob: HPCGProblem, nshards: int, dtype=jnp.float32):

@@ -37,7 +37,9 @@ def operator(A, mesh=None, backend: str = "auto", cfg=None) -> Callable:
 
     Accepts a concrete container, a (Switch)DynamicMatrix, or a
     ``DistSparseMatrix`` (then ``mesh`` is required and the closure is the
-    overlapped distributed SpMV). ``backend="auto"`` routes every SpMV —
+    overlapped distributed SpMV — including the interior/boundary overlap
+    schedule when the matrix was built split, which every CG iteration's
+    ``apply_A`` then inherits). ``backend="auto"`` routes every SpMV —
     per shard and per format — through the measured kernel-config cache
     (``repro.core.ops.kernel_route``): the Pallas kernels take the hot
     path exactly where a tuned tile config beat the reference path, so a

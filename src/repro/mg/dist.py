@@ -22,7 +22,11 @@ restriction/prolongation are shard-local gathers/scatters — no collective.
 
 A V-cycle therefore issues collectives only where the operator itself
 does: the per-sweep halo exchange and the residual's overlapped
-``dist_spmv``.
+``dist_spmv``. Each level's operator is built with the default
+``split="auto"``, so the residual SpMV runs the interior/boundary overlap
+schedule (interior compute while the halo collective is in flight); the
+colored smoother keeps working off the *full* local stacked COO the
+partition scatter already produced — the split never touches it.
 """
 from __future__ import annotations
 
@@ -107,7 +111,9 @@ class DistMGHierarchy:
         for i, lev in enumerate(self.levels):
             rec = {"level": i, "dims": lev.dims,
                    "colors": lev.colored.formats}
-            for part in ("local", "remote"):
+            parts = (("local", "boundary", "remote") if lev.A.split
+                     else ("local", "remote"))
+            for part in parts:
                 t = getattr(lev.A, part)
                 if isinstance(t, SwitchDynamicMatrix):
                     names = [f.name for f in t.candidates]

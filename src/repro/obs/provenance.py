@@ -58,6 +58,7 @@ def env_info() -> dict:
         "interpret_mode": interp,
         "force_interpret": os.environ.get("REPRO_FORCE_INTERPRET") or None,
         "trace_mode": os.environ.get("REPRO_TRACE") or "off",
+        "xla_flags": os.environ.get("XLA_FLAGS") or None,
         "git_rev": git_rev(),
         "python": sys.version.split()[0],
         "platform": platform.platform(),

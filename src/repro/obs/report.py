@@ -152,8 +152,9 @@ def render_overlap(rows: List[dict]) -> str:
         return ("(no obs_overlap rows — run "
                 "`python -m benchmarks.run --only obs`)")
     out = [f"{'version':<10} {'P':>3} {'local_us':>9} {'exch_us':>9} "
-           f"{'sum_us':>9} {'full_us':>9} {'hidden_us':>10} {'hidden':>7}",
-           "-" * 72]
+           f"{'sum_us':>9} {'full_us':>9} {'hidden_us':>10} {'hidden':>7} "
+           f"{'overhead':>8}",
+           "-" * 81]
     for r in rows:
         loc = r.get("local_us", 0.0)
         exc = r.get("exch_us", 0.0)
@@ -161,16 +162,19 @@ def render_overlap(rows: List[dict]) -> str:
         if "hidden_frac" in r:  # absent at P=1 (remote part statically empty)
             hidden = loc + exc - full
             denom = min(loc, exc) if min(loc, exc) > 0 else 1.0
-            hid, frac = f"{hidden:>10.0f}", f"{max(0.0, hidden) / denom:>6.1%}"
+            hid = f"{hidden:>10.0f}"
+            frac = f"{max(0.0, hidden) / denom:>6.1%}"
+            over = f"{max(0.0, -hidden) / denom:>7.1%}"
         else:
-            hid, frac = f"{'-':>10}", f"{'-':>6}"
+            hid, frac, over = f"{'-':>10}", f"{'-':>6}", f"{'-':>7}"
         out.append(f"{r['version']:<10} {r['p']:>3} {loc:>9.0f} {exc:>9.0f} "
-                   f"{loc + exc:>9.0f} {full:>9.0f} {hid} {frac}")
+                   f"{loc + exc:>9.0f} {full:>9.0f} {hid} {frac} {over}")
     out.append("")
-    out.append("hidden_us = local_us + exch_us - full_us: the wall time the "
-               "scheduler overlapped.")
+    out.append("hidden_us = local_us + exch_us - full_us (signed): the wall "
+               "time the scheduler overlapped.")
     out.append("hidden ~ 100% => exchange fully hidden behind local compute; "
-               "~0% => serialized (overlap lost).")
+               "0% => nothing hidden; overhead > 0% => composing the phases "
+               "costs *more* than running them apart (serialization penalty).")
     return "\n".join(out)
 
 
