@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV and persists the perf trajectory:
                            per-level multiformat hierarchies)
   bench_obs        —       exchange/local overlap decomposition per shard
                            count (the p8 diagnostic; see repro.obs.report)
+  bench_serve      —       batch-width-aware SpMM (ref vs tuned per rhs
+                           width), per-width format decisions, and decode
+                           tokens/s through launch.serve (BENCH_serve.json)
   roofline         —       dry-run roofline table (if results are present)
 
 SpMV-side suites (formats/kernels/overhead) are written to
@@ -45,6 +48,7 @@ CONVERT_SUITES = ("convert", "switch")
 DIST_SUITES = ("scaling",)
 HPCG_SUITES = ("hpcg",)
 OBS_SUITES = ("obs",)
+SERVE_SUITES = ("serve",)
 
 
 def _emit_json(path, rows, meta):
@@ -137,7 +141,8 @@ def main(argv=None):
     only = tuple(s for s in args.only.split(",") if s)
 
     from benchmarks import (bench_convert, bench_formats, bench_hpcg,
-                            bench_obs, bench_overhead, bench_scaling)
+                            bench_obs, bench_overhead, bench_scaling,
+                            bench_serve)
 
     suites = {
         "overhead": lambda: bench_overhead.run(
@@ -162,6 +167,9 @@ def main(argv=None):
             (1, 2, 4), grid=(8, 8, 16), iters=10,
             attempts=1) if args.quick else
             bench_obs.run((1, 2, 4, 8, 16, 32)),
+        "serve": lambda: bench_serve.run(
+            widths=(1, 8) if args.quick else (1, 8, 64, 256),
+            quick=args.quick),
     }
     results = {}
     print("name,us_per_call,derived")
@@ -185,6 +193,7 @@ def main(argv=None):
     dist_rows = [r for s in DIST_SUITES for r in results.get(s, ())]
     hpcg_rows = [r for s in HPCG_SUITES for r in results.get(s, ())]
     obs_rows = [r for s in OBS_SUITES for r in results.get(s, ())]
+    serve_rows = [r for s in SERVE_SUITES for r in results.get(s, ())]
     if spmv_rows:
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_spmv.json"),
                                   spmv_rows, meta))
@@ -200,6 +209,9 @@ def main(argv=None):
     if obs_rows:
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_obs.json"),
                                   obs_rows, meta))
+    if serve_rows:
+        print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_serve.json"),
+                                  serve_rows, meta))
 
     # roofline table pointer (if the dry-run has produced results)
     if not only or "roofline" in only:

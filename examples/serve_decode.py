@@ -14,7 +14,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.serve import DecodeEngine
+from repro.launch.serve import DecodeEngine, serve
 from repro.models import build_model
 
 
@@ -47,17 +47,16 @@ def main(argv=None):
     engine = DecodeEngine(model, params, args.slots, args.max_len)
 
     rng = np.random.default_rng(0)
-    queue = [(i, rng.integers(0, cfg.vocab, (args.prompt_len,)).astype(np.int32))
-             for i in range(args.requests)]
-    done, t0 = [], time.perf_counter()
-    while queue or engine.active.any():
-        while queue and engine.add_request(*queue[0]):
-            queue.pop(0)
-        done += engine.step(args.max_new)
+    requests = [
+        (i, rng.integers(0, cfg.vocab, (args.prompt_len,)).astype(np.int32))
+        for i in range(args.requests)]
+    t0 = time.perf_counter()
+    done, _ = serve(engine, requests, args.max_new)
     dt = time.perf_counter() - t0
     ntok = sum(len(o) for _, o in done)
+    mode = "batched" if model.supports_prefill_cache() else "by-decode"
     print(f"served {len(done)} requests / {ntok} tokens in {dt:.2f}s "
-          f"({ntok / dt:.1f} tok/s)")
+          f"({ntok / dt:.1f} tok/s, {engine.prefill_calls} {mode} prefills)")
     for rid, out in sorted(done)[:3]:
         print(f"  req {rid:2d}: {out[:12]}{'...' if len(out) > 12 else ''}")
 

@@ -17,14 +17,16 @@ from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
                                 coo_from_dense_np, deep_copy, dense_from_array,
                                 random_coo, shallow_copy, to_dense_np)
 from repro.core.ops import (assign, axpy, dot, extract_diagonal, norm2,
-                            reduction, spmm, spmv, update_diagonal, waxpby)
+                            reduction, spmm, spmm_t, spmv, update_diagonal,
+                            waxpby)
 
 __all__ = [
     "Format", "COO", "CSR", "DIA", "ELL", "BSR", "Dense", "HYB",
     "convert", "convert_execute", "convert_execute_batch", "plan_switch",
     "plan_switch_batch", "SwitchPlan", "to_coo",
     "DynamicMatrix", "SwitchDynamicMatrix",
-    "DEFAULT_CANDIDATES", "spmv", "spmm", "dot", "waxpby", "axpy", "norm2",
+    "DEFAULT_CANDIDATES", "spmv", "spmm", "spmm_t", "dot", "waxpby", "axpy",
+    "norm2",
     "assign", "reduction", "extract_diagonal", "update_diagonal",
     "autotune", "profile_select", "analytic_select", "TuneReport",
     "PatternStats", "banded_coo", "random_coo", "coo_from_arrays",

@@ -62,7 +62,7 @@ def resolve_backend(backend: str, A=None) -> str:
     return kops.auto_backend()
 
 
-def kernel_route(A, op: str = "spmv", cache=None):
+def kernel_route(A, op: str = "spmv", cache=None, ncols=None):
     """The measured ``"auto"`` decision for a concrete container.
 
     Returns ``("pallas", cfg)`` when a cached kernel-tune record for
@@ -71,6 +71,8 @@ def kernel_route(A, op: str = "spmv", cache=None):
     exists: an unmeasured kernel is never presumed faster. Host dict
     lookups only; safe at trace time (the decision is baked into the
     jitted program, so retune-then-retrace to pick up new winners).
+    ``ncols`` is the rhs batch width for the spmm ops — lookups hit the
+    matching rhs-width bucket only.
     """
     if isinstance(A, _DYN_TYPES):
         A = getattr(A, "concrete", A)
@@ -78,7 +80,7 @@ def kernel_route(A, op: str = "spmv", cache=None):
         _metrics.inc("kernel.route.ref")
         return "ref", None
     from repro.tuning import kernel_tune  # lazy: tuning imports core
-    rec = kernel_tune.best_config(A, op=op, cache=cache)
+    rec = kernel_tune.best_config(A, op=op, ncols=ncols, cache=cache)
     if rec is not None and rec.speedup >= 1.0:
         _metrics.inc("kernel.route.pallas")
         if _trace.mode() != "off":
@@ -244,11 +246,13 @@ _SPMM = {COO: _spmm_coo, CSR: _spmm_csr, DIA: _spmm_dia, ELL: _spmm_ell,
 
 def spmm(A, B, backend: str = "ref", cfg=None):
     """Y = A @ B with dense B of shape (N, K). ``backend``/``cfg`` as in
-    :func:`spmv` (auto routing keys on the ``op="spmm"`` records)."""
+    :func:`spmv` (auto routing keys on the ``op="spmm"`` records, bucketed
+    by the rhs width K — a winner measured at one batch width never
+    routes another)."""
     if isinstance(A, _DYN_TYPES):
         return A.spmm(B, backend=backend, cfg=cfg)
     if backend == "auto":
-        backend, auto_cfg = kernel_route(A, op="spmm")
+        backend, auto_cfg = kernel_route(A, op="spmm", ncols=B.shape[1])
         cfg = cfg if cfg is not None else auto_cfg
     if backend == "pallas":
         from repro.kernels import ops as kops
@@ -256,6 +260,30 @@ def spmm(A, B, backend: str = "ref", cfg=None):
         if fn is not None:
             return fn(A, B, cfg=cfg)
     return _SPMM[type(A)](A, B)
+
+
+def spmm_t(A, X, backend: str = "ref", cfg=None):
+    """Y = X @ A^T for activations X of shape (T, N); returns (T, M).
+
+    The serving orientation: ``LinearSparse`` keeps its weight transposed
+    ((d_out, d_in)) and activations row-major, so this is the layer
+    matmul with **no activation transposes** on the Pallas path. The
+    reference path *is* the classic double transpose
+    (``spmm(A, X.T).T``) — the baseline the equivalence tests compare
+    against, and what the fused-transpose kernels must beat to route.
+    Auto routing keys on ``op="spmm_t"`` records bucketed by T.
+    """
+    if isinstance(A, _DYN_TYPES):
+        return A.spmm_t(X, backend=backend, cfg=cfg)
+    if backend == "auto":
+        backend, auto_cfg = kernel_route(A, op="spmm_t", ncols=X.shape[0])
+        cfg = cfg if cfg is not None else auto_cfg
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        fn = kops.SPMM_T_PALLAS.get(type(A))
+        if fn is not None:
+            return fn(A, X, cfg=cfg)
+    return _SPMM[type(A)](A, X.T).T
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,15 @@ Blocking: grid over row tiles of ``tm`` rows; x resident in VMEM (ops
 wrapper falls back to ref when it would not fit). ``(tm, layout)`` are
 searched per (shape bucket, backend, device) by
 ``repro.tuning.kernel_tune``.
+
+SpMM (:func:`ell_spmm` / :func:`ell_spmm_t`) reuses the same lane-aligned
+layouts with an rhs tile axis ``tn``: ``"row"`` materialises the full
+(tm, K, tn) gather (one wide VPU pass — wins for small K), ``"col"``
+streams K planes of (tm, tn) gather-FMA through a ``fori_loop`` so the
+transient footprint stays (tm, tn) no matter how long the rows are (the
+pruned-weight case, K in the hundreds). The ``_t`` variant takes
+activations (T, N) row-major and scans planes of (tn, tm) gathers along
+the minor axis — no activation transposes (see ``csr_spmm.py``).
 """
 from __future__ import annotations
 
@@ -83,3 +92,137 @@ def ell_spmv(cols: jax.Array, data: jax.Array, x: jax.Array,
         interpret=interpret,
     )(cols, data, x)
     return y[:m]
+
+
+# ---------------------------------------------------------------------------
+# SpMM: Y = A @ B (and the transposed-rhs serving orientation)
+# ---------------------------------------------------------------------------
+
+
+def _ell_spmm_kernel_row(cols_ref, data_ref, b_ref, y_ref):
+    cols = cols_ref[...]                       # (tm, K)
+    vals = data_ref[...]
+    b = b_ref[...]                             # (N, tn)
+    gathered = jnp.take(b, cols, axis=0, mode="clip")   # (tm, K, tn)
+    acc = jnp.sum(vals.astype(jnp.float32)[..., None]
+                  * gathered.astype(jnp.float32), axis=1)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+def _ell_spmm_kernel_col(cols_ref, data_ref, b_ref, y_ref, *, tn: int):
+    cols = cols_ref[...]                       # (tm, K)
+    vals = data_ref[...]
+    b = b_ref[...]                             # (N, tn)
+    tm, k = cols.shape
+
+    def plane(kk, acc):
+        c = jax.lax.dynamic_index_in_dim(cols, kk, 1, keepdims=False)
+        v = jax.lax.dynamic_index_in_dim(vals, kk, 1, keepdims=False)
+        g = jnp.take(b, c, axis=0, mode="clip")          # (tm, tn)
+        return acc + v.astype(jnp.float32)[:, None] * g.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, k, plane, jnp.zeros((tm, tn), jnp.float32))
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+def _ell_spmm_t_kernel_row(cols_ref, data_ref, x_ref, y_ref):
+    cols = cols_ref[...]                       # (tm, K)
+    vals = data_ref[...]
+    x = x_ref[...]                             # (tn, N)
+    safe = jnp.clip(cols, 0, x.shape[1] - 1)
+    gathered = jnp.take(x, safe, axis=1)       # (tn, tm, K)
+    acc = jnp.sum(vals.astype(jnp.float32)[None, ...]
+                  * gathered.astype(jnp.float32), axis=2)
+    y_ref[...] = acc.astype(y_ref.dtype)       # (tn, tm)
+
+
+def _ell_spmm_t_kernel_col(cols_ref, data_ref, x_ref, y_ref, *, tn: int):
+    cols = cols_ref[...]                       # (tm, K)
+    vals = data_ref[...]
+    x = x_ref[...]                             # (tn, N)
+    tm, k = cols.shape
+
+    def plane(kk, acc):
+        c = jax.lax.dynamic_index_in_dim(cols, kk, 1, keepdims=False)
+        v = jax.lax.dynamic_index_in_dim(vals, kk, 1, keepdims=False)
+        g = jnp.take(x, jnp.clip(c, 0, x.shape[1] - 1), axis=1)  # (tn, tm)
+        return acc + v.astype(jnp.float32)[None, :] * g.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, k, plane, jnp.zeros((tn, tm), jnp.float32))
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "layout", "interpret"))
+def ell_spmm(cols: jax.Array, data: jax.Array, B: jax.Array,
+             tm: int = 256, tn: int = 128, layout: str = "col",
+             interpret: bool = True) -> jax.Array:
+    """Y = A @ B for ELL A (cols[M, K], data[M, K]) and dense B (N, Kb)."""
+    if layout not in ("row", "col"):
+        raise ValueError(f"layout {layout!r} not in ('row', 'col')")
+    m, k = data.shape
+    n, kb = B.shape
+    if k == 0:
+        return jnp.zeros((m, kb), B.dtype)
+    mp = ((m + tm - 1) // tm) * tm
+    if mp != m:
+        cols = jnp.pad(cols, ((0, mp - m), (0, 0)))
+        data = jnp.pad(data, ((0, mp - m), (0, 0)))
+    kp = ((kb + tn - 1) // tn) * tn
+    if kp != kb:
+        B = jnp.pad(B, ((0, 0), (0, kp - kb)))
+
+    grid = (mp // tm, kp // tn)
+    in_specs = [
+        pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((n, tn), lambda i, j: (0, j)),
+    ]
+    kernel = (functools.partial(_ell_spmm_kernel_col, tn=tn)
+              if layout == "col" else _ell_spmm_kernel_row)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, kp), B.dtype),
+        interpret=interpret,
+    )(cols, data, B)
+    return y[:m, :kb]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "layout", "interpret"))
+def ell_spmm_t(cols: jax.Array, data: jax.Array, X: jax.Array,
+               tm: int = 256, tn: int = 8, layout: str = "col",
+               interpret: bool = True) -> jax.Array:
+    """Y = X @ A^T for ELL A and activations X (T, N); returns (T, M)."""
+    if layout not in ("row", "col"):
+        raise ValueError(f"layout {layout!r} not in ('row', 'col')")
+    m, k = data.shape
+    t, n = X.shape
+    if k == 0:
+        return jnp.zeros((t, m), X.dtype)
+    mp = ((m + tm - 1) // tm) * tm
+    if mp != m:
+        cols = jnp.pad(cols, ((0, mp - m), (0, 0)))
+        data = jnp.pad(data, ((0, mp - m), (0, 0)))
+    tp = ((t + tn - 1) // tn) * tn
+    if tp != t:
+        X = jnp.pad(X, ((0, tp - t), (0, 0)))
+
+    grid = (mp // tm, tp // tn)
+    in_specs = [
+        pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((tn, n), lambda i, j: (j, 0)),
+    ]
+    kernel = (functools.partial(_ell_spmm_t_kernel_col, tn=tn)
+              if layout == "col" else _ell_spmm_t_kernel_row)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((tp, mp), X.dtype),
+        interpret=interpret,
+    )(cols, data, X)
+    return y[:t, :m]

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.formats import BSR, CSR, DIA, ELL, HYB
 from repro.kernels import bsr_spmm as _bsr
+from repro.kernels import csr_spmm as _csr_mm
 from repro.kernels import csr_spmv as _csr
 from repro.kernels import dia_spmv as _dia
 from repro.kernels import ell_spmv as _ell
@@ -98,7 +99,8 @@ def _csr_tiles(m: int, nnz: int, cfg: Optional[dict],
     return tm, tk
 
 
-def resolve_config(A, cfg: Optional[dict], op: str = "spmv") -> dict:
+def resolve_config(A, cfg: Optional[dict], op: str = "spmv",
+                   ncols: Optional[int] = None) -> dict:
     """The tile config a wrapper should run with: an explicit ``cfg``
     wins; otherwise the *tuned* winner cached for ``A``'s shape bucket
     (host dict lookup, trace-time only); otherwise the density heuristic.
@@ -106,43 +108,66 @@ def resolve_config(A, cfg: Optional[dict], op: str = "spmv") -> dict:
     Consulting the tuned cache here — not just on the ``"auto"`` route —
     means resolve-then-dispatch callers (``resolve_backend("auto", A)``
     followed by ``spmv(backend="pallas")``) also run the measured winner
-    rather than silently falling back to an untuned default.
+    rather than silently falling back to an untuned default. ``ncols``
+    is the rhs width for the spmm ops — part of the tuned-record key (a
+    winner measured at one batch width is never replayed at another).
     """
     if cfg is not None:
         return cfg
     try:
         from repro.tuning import kernel_tune  # lazy: tuning imports kernels
-        rec = kernel_tune.best_config(A, op=op)
+        rec = kernel_tune.best_config(A, op=op, ncols=ncols)
         if rec is not None:
             return dict(rec.cfg)
     except ImportError:  # pragma: no cover - partial installs
         pass
-    return default_config(A)
+    return default_config(A, op=op, ncols=ncols)
 
 
-def _pick(explicit, cfg: dict, key: str, A):
+def _pick(explicit, cfg: dict, key: str, A, op: str = "spmv",
+          ncols: Optional[int] = None):
     """The one precedence rule for kernel params: explicit kwarg > ``cfg``
     entry > density-heuristic default (guards tuned records that predate a
     newly added key)."""
     if explicit is not None:
         return explicit
     v = cfg.get(key)
-    return v if v is not None else default_config(A)[key]
+    return v if v is not None else default_config(A, op=op, ncols=ncols)[key]
 
 
-def default_config(A) -> dict:
+def _rhs_tile(ncols: Optional[int]) -> int:
+    """Default rhs tile: the whole (pow2-rounded) batch width up to 256 —
+    b=1 decode runs a 1-lane tile instead of padding to a full slab."""
+    return _pow2_clamp(ncols or 128, 1, 256)
+
+
+def default_config(A, op: str = "spmv", ncols: Optional[int] = None) -> dict:
     """Density-heuristic tile config for ``A`` (the no-tuning default).
 
     ``repro.tuning.kernel_tune.best_config`` supersedes this with a
-    measured winner when one is cached for the matrix's shape bucket
-    (see :func:`resolve_config`).
+    measured winner when one is cached for the matrix's (shape bucket,
+    rhs-width bucket) (see :func:`resolve_config`). ``op`` selects the
+    kernel family: the spmm ops add the ``tn`` rhs tile, and ELL's layout
+    default flips to the plane-streaming ``"col"`` once rows are long
+    enough that a (tm, K, tn) row-layout gather would blow the transient
+    footprint.
     """
     m = A.shape[0]
     nnz = max(1, int(getattr(A, "nnz", 1)))
+    spmm = op in ("spmm", "spmm_t")
     if isinstance(A, CSR):
         tm, tk = _csr_tiles(m, nnz, None)
+        if spmm:
+            # wide rhs: each nnz chunk costs tk*tn work — shrink the chunk
+            tk = _pow2_clamp(tk / max(1, _rhs_tile(ncols) // 8), 256, 4096)
+            return {"tm": tm, "tk": tk, "tn": _rhs_tile(ncols)}
         return {"tm": tm, "tk": tk}
     if isinstance(A, ELL):
+        k = A.data.shape[1]
+        if spmm:
+            layout = "row" if k <= 32 else "col"
+            return {"tm": _pow2_clamp(min(m, 1024), 8, 8192),
+                    "layout": layout, "tn": _rhs_tile(ncols)}
         # interpret mode pays per grid step: prefer one big tile; native
         # Mosaic wants lane-aligned (K, tm) tiles in VMEM.
         if interpret_mode():
@@ -153,7 +178,11 @@ def default_config(A) -> dict:
     if isinstance(A, BSR):
         return {"tn": 128}
     if isinstance(A, HYB):
-        return {"ell": default_config(A.ell)}
+        sub = {"ell": default_config(A.ell, op=op, ncols=ncols)}
+        if spmm:
+            tm, tk = _csr_tiles(m, max(1, int(A.coo.nnz)), None)
+            sub["csr"] = {"tm": tm, "tk": tk, "tn": _rhs_tile(ncols)}
+        return sub
     return {}
 
 
@@ -242,7 +271,8 @@ def _bsr_rows_nonempty(A: BSR) -> bool:
 
 def bsr_spmm(A: BSR, B: jax.Array, tn: Optional[int] = None,
              cfg: Optional[dict] = None, _op: str = "spmm") -> jax.Array:
-    cfg = resolve_config(A, cfg, op=_op)
+    ncols = B.shape[1] if _op in ("spmm", "spmm_t") else None
+    cfg = resolve_config(A, cfg, op=_op, ncols=ncols)
     tn = int(_pick(tn, cfg, "tn", A))
     if not _bsr_rows_nonempty(A):
         from repro.core import ops as core_ops
@@ -258,7 +288,143 @@ def bsr_spmv(A: BSR, x: jax.Array, tn: Optional[int] = None,
     return bsr_spmm(A, x[:, None], tn=tn, cfg=cfg, _op="spmv")[:, 0]
 
 
+# ---------------------------------------------------------------------------
+# SpMM wrappers: Y = A @ B (B (N, K)) and the transposed-rhs serving
+# orientation Y = X @ A^T (X (T, N)). ``tn`` tiles the rhs/batch axis;
+# defaults and tuned records are keyed by the rhs-width bucket.
+# ---------------------------------------------------------------------------
+
+
+def _spmm_cfg(A, cfg, op, ncols, tm=None, tk=None, tn=None):
+    cfg = resolve_config(A, cfg, op=op, ncols=ncols)
+    tm = int(_pick(tm, cfg, "tm", A, op=op, ncols=ncols))
+    tk = int(_pick(tk, cfg, "tk", A, op=op, ncols=ncols))
+    tn = int(_pick(tn, cfg, "tn", A, op=op, ncols=ncols))
+    return tm, tk, tn
+
+
+def csr_spmm(A: CSR, B: jax.Array, tm: Optional[int] = None,
+             tk: Optional[int] = None, tn: Optional[int] = None,
+             cfg: Optional[dict] = None) -> jax.Array:
+    """Y = A @ B via the row x rhs tiled Pallas kernel. The VMEM check
+    counts the per-tile B slab (N x tn), not all of B."""
+    from repro.core import ops as core_ops
+    tm, tk, tn = _spmm_cfg(A, cfg, "spmm", B.shape[1], tm=tm, tk=tk, tn=tn)
+    resident = (3 * A.capacity + (A.shape[1] + tm) * tn) * 4
+    if resident > X_VMEM_BUDGET:
+        return core_ops._spmm_csr(A, B)
+    rows = core_ops.csr_row_ids(A.indptr, A.capacity, A.shape[0])
+    return _csr_mm.csr_spmm(A.indptr, rows, A.indices, A.data, B,
+                            tm=tm, tk=tk, tn=tn, interpret=interpret_mode())
+
+
+def csr_spmm_t(A: CSR, X: jax.Array, tm: Optional[int] = None,
+               tk: Optional[int] = None, tn: Optional[int] = None,
+               cfg: Optional[dict] = None) -> jax.Array:
+    """Y = X @ A^T for activations X (T, N) — no activation transposes."""
+    from repro.core import ops as core_ops
+    tm, tk, tn = _spmm_cfg(A, cfg, "spmm_t", X.shape[0], tm=tm, tk=tk, tn=tn)
+    resident = (3 * A.capacity + (A.shape[1] + tm) * tn) * 4
+    if resident > X_VMEM_BUDGET:
+        return core_ops._spmm_csr(A, X.T).T
+    rows = core_ops.csr_row_ids(A.indptr, A.capacity, A.shape[0])
+    return _csr_mm.csr_spmm_t(A.indptr, rows, A.indices, A.data, X,
+                              tm=tm, tk=tk, tn=tn, interpret=interpret_mode())
+
+
+def _ell_spmm_cfg(A, cfg, op, ncols, tm=None, layout=None, tn=None):
+    cfg = resolve_config(A, cfg, op=op, ncols=ncols)
+    tm = int(_pick(tm, cfg, "tm", A, op=op, ncols=ncols))
+    layout = _pick(layout, cfg, "layout", A, op=op, ncols=ncols)
+    tn = int(_pick(tn, cfg, "tn", A, op=op, ncols=ncols))
+    return tm, layout, tn
+
+
+def _ell_spmm_fits(A: ELL, tm: int, layout: str, tn: int, n: int) -> bool:
+    k = A.data.shape[1]
+    transient = tm * k * tn if layout == "row" else tm * tn
+    resident = 2 * tm * k + n * tn + tm * tn + transient
+    return resident * 4 <= X_VMEM_BUDGET
+
+
+def ell_spmm(A: ELL, B: jax.Array, tm: Optional[int] = None,
+             layout: Optional[str] = None, tn: Optional[int] = None,
+             cfg: Optional[dict] = None) -> jax.Array:
+    from repro.core import ops as core_ops
+    tm, layout, tn = _ell_spmm_cfg(A, cfg, "spmm", B.shape[1],
+                                   tm=tm, layout=layout, tn=tn)
+    if not _ell_spmm_fits(A, tm, layout, tn, A.shape[1]):
+        return core_ops._spmm_ell(A, B)
+    return _ell.ell_spmm(A.cols, A.data, B, tm=tm, tn=tn, layout=layout,
+                         interpret=interpret_mode())
+
+
+def ell_spmm_t(A: ELL, X: jax.Array, tm: Optional[int] = None,
+               layout: Optional[str] = None, tn: Optional[int] = None,
+               cfg: Optional[dict] = None) -> jax.Array:
+    from repro.core import ops as core_ops
+    tm, layout, tn = _ell_spmm_cfg(A, cfg, "spmm_t", X.shape[0],
+                                   tm=tm, layout=layout, tn=tn)
+    if not _ell_spmm_fits(A, tm, layout, tn, A.shape[1]):
+        return core_ops._spmm_ell(A, X.T).T
+    return _ell.ell_spmm_t(A.cols, A.data, X, tm=tm, tn=tn, layout=layout,
+                           interpret=interpret_mode())
+
+
+def _hyb_tail_csr(A: HYB):
+    """The COO overflow tail in CSR layout (stable sort + bincount row
+    pointers), same assembly as :func:`hyb_spmv` — plan-built tails are
+    already row-sorted so the sort is cheap under jit."""
+    c = A.coo
+    order = jnp.argsort(c.row, stable=True)
+    rows = c.row[order]
+    indptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jnp.bincount(rows, length=A.shape[0])).astype(jnp.int32)])
+    return indptr, rows, c.col[order], c.data[order]
+
+
+def hyb_spmm(A: HYB, B: jax.Array, cfg: Optional[dict] = None) -> jax.Array:
+    from repro.core import ops as core_ops
+    cfg = resolve_config(A, cfg, op="spmm", ncols=B.shape[1])
+    y = ell_spmm(A.ell, B, cfg=cfg.get("ell"))
+    sub = cfg.get("csr") or {}
+    tm, tk = _csr_tiles(A.shape[0], max(1, int(A.coo.nnz)), sub)
+    tn = int(sub.get("tn") or _rhs_tile(B.shape[1]))
+    if (3 * A.coo.capacity + (A.shape[1] + tm) * tn) * 4 > X_VMEM_BUDGET:
+        return y + core_ops._spmm_coo(A.coo, B)
+    indptr, rows, col, data = _hyb_tail_csr(A)
+    tail = _csr_mm.csr_spmm(indptr, rows, col, data, B, tm=tm, tk=tk, tn=tn,
+                            interpret=interpret_mode())
+    return y + tail
+
+
+def hyb_spmm_t(A: HYB, X: jax.Array, cfg: Optional[dict] = None) -> jax.Array:
+    from repro.core import ops as core_ops
+    cfg = resolve_config(A, cfg, op="spmm_t", ncols=X.shape[0])
+    y = ell_spmm_t(A.ell, X, cfg=cfg.get("ell"))
+    sub = cfg.get("csr") or {}
+    tm, tk = _csr_tiles(A.shape[0], max(1, int(A.coo.nnz)), sub)
+    tn = int(sub.get("tn") or _rhs_tile(X.shape[0]))
+    if (3 * A.coo.capacity + (A.shape[1] + tm) * tn) * 4 > X_VMEM_BUDGET:
+        return y + core_ops._spmm_coo(A.coo, X.T).T
+    indptr, rows, col, data = _hyb_tail_csr(A)
+    tail = _csr_mm.csr_spmm_t(indptr, rows, col, data, X, tm=tm, tk=tk,
+                              tn=tn, interpret=interpret_mode())
+    return y + tail
+
+
+def bsr_spmm_t(A: BSR, X: jax.Array, tn: Optional[int] = None,
+               cfg: Optional[dict] = None) -> jax.Array:
+    """BSR has no native transposed-rhs kernel yet: run the (N, K) kernel
+    on X^T. Still one fused jit region, but pays the two transposes —
+    tuned separately (op="spmm_t") so the veto is honest about that cost."""
+    return bsr_spmm(A, X.T, tn=tn, cfg=cfg, _op="spmm_t").T
+
+
 # Registries consumed by repro.core.ops.spmv/spmm(backend="pallas").
 SPMV_PALLAS = {DIA: dia_spmv, ELL: ell_spmv, BSR: bsr_spmv, CSR: csr_spmv,
                HYB: hyb_spmv}
-SPMM_PALLAS = {BSR: bsr_spmm}
+SPMM_PALLAS = {BSR: bsr_spmm, CSR: csr_spmm, ELL: ell_spmm, HYB: hyb_spmm}
+SPMM_T_PALLAS = {CSR: csr_spmm_t, ELL: ell_spmm_t, HYB: hyb_spmm_t,
+                 BSR: bsr_spmm_t}

@@ -5,15 +5,28 @@ decode slots; finished sequences (EOS or max length) are retired and their
 slots refilled from the request queue between jit'd decode steps (the step
 itself is slot-count static, so one compiled program serves the whole run).
 
+Prefill is ONE jit'd forward per admission batch (``model.prefill_cache``):
+pending requests accumulate in a queue and are admitted together whenever
+slots free up, padded to pow2 (rows, prompt-len) buckets so the jit cache
+stays small.  Families without an addressable kv cache (ssm/hybrid) fall
+back to per-token prefill through the decode path.
+
+``repro.env.apply()`` runs at entry-point import time — *before* jax
+initializes — so backend-gated XLA flags actually reach the runtime.
+
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm_1_6b --smoke \
       --requests 8 --slots 4 --max-new 16
 """
 from __future__ import annotations
 
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess
+    from repro import env as _env
+    _env.apply()
+
 import argparse
 import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +36,21 @@ from repro.configs import get_config
 from repro.models import build_model
 
 
+def _pow2_at_least(n: int, cap: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return min(p, cap)
+
+
 class DecodeEngine:
-    """Static-slot batched greedy decoder."""
+    """Static-slot batched greedy decoder with batched jit'd prefill.
+
+    Requests enter via :meth:`submit` (a pending queue); :meth:`refill`
+    admits as many as there are free slots in ONE ``prefill_cache`` call,
+    padded to pow2 (rows, prompt-len) buckets — pad rows replicate the
+    last real request so duplicate cache scatters write identical values.
+    """
 
     def __init__(self, model, params, slots: int, max_len: int):
         self.model = model
@@ -37,30 +63,82 @@ class DecodeEngine:
         self.active = np.zeros((slots,), bool)
         self.outputs: List[Optional[list]] = [None] * slots
         self.request_ids = [-1] * slots
+        self.pending: List[Tuple[int, np.ndarray]] = []
+        self.prefill_calls = 0
         self._step = jax.jit(model.decode_step)
+        self._prefill = {}  # (R, P) bucket -> jit'd prefill_cache
 
-    def add_request(self, rid: int, prompt: np.ndarray) -> bool:
-        """Prefill-by-decode: feed prompt tokens through the decode path
-        (single compiled program; fine at smoke scale — a production server
-        would run model.prefill for long prompts)."""
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, rid: int, prompt: np.ndarray) -> None:
+        """Queue a request; admitted at the next :meth:`refill`."""
+        self.pending.append((rid, np.asarray(prompt, np.int32)))
+
+    def refill(self) -> int:
+        """Admit pending requests into free slots (one batched prefill).
+
+        Returns the number of requests admitted."""
         free = np.where(~self.active)[0]
-        if len(free) == 0:
-            return False
-        s = int(free[0])
-        self.active[s] = True
-        self.request_ids[s] = rid
-        self.outputs[s] = []
-        # feed prompt
+        n = min(len(free), len(self.pending))
+        if n == 0:
+            return 0
+        batch, self.pending = self.pending[:n], self.pending[n:]
+        slots = free[:n]
+        if self.model.supports_prefill_cache():
+            first = self._prefill_batched(batch, slots)
+        else:
+            first = [self._prefill_by_decode(prompt, int(s))
+                     for (_, prompt), s in zip(batch, slots)]
+        for (rid, prompt), s, tok in zip(batch, slots, first):
+            s = int(s)
+            self.active[s] = True
+            self.request_ids[s] = rid
+            self.tokens[s] = tok
+            self.pos[s] = len(prompt)
+            self.outputs[s] = [tok]
+        return n
+
+    def _prefill_batched(self, batch, slots) -> List[int]:
+        """ONE jit'd forward primes the cache for every admitted request.
+
+        Rows and prompt length are padded to pow2 buckets so a stream of
+        ragged admissions compiles a handful of programs, not one per
+        shape; pad rows duplicate the last real request (identical scatter
+        values make the duplicate slot indices well-defined)."""
+        lens = [len(p) for _, p in batch]
+        R = _pow2_at_least(len(batch), self.slots)
+        P = _pow2_at_least(max(lens), self.max_len)
+        tokens = np.zeros((R, P), np.int32)
+        for i, (_, prompt) in enumerate(batch):
+            tokens[i, :len(prompt)] = prompt
+        lengths = np.asarray(lens + [lens[-1]] * (R - len(batch)), np.int32)
+        srows = np.asarray(list(slots) + [slots[-1]] * (R - len(batch)),
+                           np.int32)
+        tokens[len(batch):] = tokens[len(batch) - 1]
+        key = (R, P)
+        if key not in self._prefill:
+            self._prefill[key] = jax.jit(self.model.prefill_cache)
+        logits, self.cache = self._prefill[key](
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(srows), jnp.asarray(lengths))
+        self.prefill_calls += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        return [int(t) for t in nxt[:len(batch)]]
+
+    def _prefill_by_decode(self, prompt: np.ndarray, s: int) -> int:
+        """Fallback for recurrent-state families (ssm/hybrid): the cache
+        is positional, so the prompt must be stepped token by token."""
+        logits = None
+        self.prefill_calls += 1
         for i, t in enumerate(prompt):
             self.tokens[s] = t
             self.pos[s] = i
             logits, self.cache = self._step(
                 self.params, self.cache,
                 jnp.asarray(self.tokens), jnp.asarray(self.pos))
-        self.tokens[s] = int(np.asarray(jnp.argmax(logits[s])))
-        self.pos[s] = len(prompt)
-        self.outputs[s].append(int(self.tokens[s]))
-        return True
+        return int(np.asarray(jnp.argmax(logits[s])))
+
+    # -- decode ------------------------------------------------------------
 
     def step(self, max_new: int, eos: int = -1):
         """One decode step for every active slot; retire finished ones."""
@@ -85,6 +163,20 @@ class DecodeEngine:
         return finished
 
 
+def serve(engine: DecodeEngine, requests, max_new: int, eos: int = -1):
+    """Run the engine to completion over ``requests`` [(rid, prompt), ...].
+
+    Returns (done, steps): done is [(rid, output_tokens), ...]."""
+    for rid, prompt in requests:
+        engine.submit(rid, prompt)
+    done, steps = [], 0
+    while engine.pending or engine.active.any():
+        engine.refill()
+        done += engine.step(max_new, eos=eos)
+        steps += 1
+    return done, steps
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
@@ -105,19 +197,19 @@ def main(argv=None):
     engine = DecodeEngine(model, params, args.slots, args.max_len)
 
     rng = np.random.default_rng(args.seed)
-    queue = [(i, rng.integers(0, cfg.vocab, (args.prompt_len,)).astype(np.int32))
-             for i in range(args.requests)]
-    done, t0, steps = [], time.perf_counter(), 0
-    while queue or engine.active.any():
-        while queue and engine.add_request(*queue[0]):
-            queue.pop(0)
-        done += engine.step(args.max_new)
-        steps += 1
+    requests = [
+        (i, rng.integers(0, cfg.vocab, (args.prompt_len,)).astype(np.int32))
+        for i in range(args.requests)]
+    t0 = time.perf_counter()
+    done, steps = serve(engine, requests, args.max_new)
     dt = time.perf_counter() - t0
     ntok = sum(len(o) for _, o in done)
+    mode = "batched" if model.supports_prefill_cache() else "by-decode"
     print(f"served {len(done)} requests, {ntok} tokens in {dt:.2f}s "
-          f"({ntok / dt:.1f} tok/s, {steps} engine steps)")
-    for rid, out in sorted(done)[:4]:
+          f"({ntok / dt:.1f} tok/s, {steps} engine steps, "
+          f"{engine.prefill_calls} {mode} prefills)")
+    show = len(done) if args.smoke else 4
+    for rid, out in sorted(done)[:show]:
         print(f"  req {rid}: {out[:10]}{'...' if len(out) > 10 else ''}")
     return 0
 

@@ -20,7 +20,7 @@ import jax
 import numpy as np
 
 from repro.core import (DynamicMatrix, Format, coo_from_dense_np, convert,
-                        spmm)
+                        spmm_t)
 from repro.tuning.policy import FormatPolicy
 
 # Weight matrices are ragged post-pruning; DIA is never competitive there,
@@ -38,27 +38,43 @@ def prune_magnitude(w: np.ndarray, density: float) -> np.ndarray:
 
 @jax.tree_util.register_pytree_node_class
 class LinearSparse:
-    """y = x @ W with W stored as a DynamicMatrix (any supported format)."""
+    """y = x @ W with W stored as a DynamicMatrix (any supported format).
 
-    def __init__(self, weight: DynamicMatrix, bias=None):
-        self.weight = weight  # DynamicMatrix of shape (d_in, d_out)
+    ``backend`` is the SpMM backend the layer calls through (pytree aux
+    data, so it survives jit/vmap): ``"auto"`` (default) routes to a
+    tuned Pallas kernel exactly when one measured faster than ref *for
+    this batch-width bucket* — an untuned layer runs the reference path,
+    identical numerics either way.
+    """
+
+    def __init__(self, weight: DynamicMatrix, bias=None,
+                 backend: str = "auto"):
+        self.weight = weight  # DynamicMatrix, stored (d_out, d_in)
         self.bias = bias
+        self.backend = backend
 
     @classmethod
     def from_dense(cls, w, fmt: Optional[Format] = None, bias=None,
-                   tune="analytic", **conv_kwargs) -> "LinearSparse":
+                   tune="analytic", backend: str = "auto",
+                   ncols: Optional[int] = None,
+                   **conv_kwargs) -> "LinearSparse":
         """Build from a (pruned) dense weight (d_in, d_out); fmt=None
         auto-tunes via a FormatPolicy — ``tune`` is a policy mode string
         ("ml" | "profile" | "analytic" | "cached") or a FormatPolicy.
         Stored TRANSPOSED (d_out, d_in): y = x@W computes as
-        spmm(W^T, x^T)^T — SpMM contracts the stored matrix's columns."""
+        ``spmm_t(W^T, x)`` = x @ W with no activation transposes.
+        ``ncols`` (the expected batch width) makes the selection
+        batch-width-aware: profile mode measures the actual transposed-rhs
+        SpMM at that width, so decode (b=1) and prefill (b=256) builds can
+        legitimately pick different formats."""
         coo = coo_from_dense_np(np.asarray(w).T)
         if fmt is None:
             policy = (tune if isinstance(tune, FormatPolicy)
                       else FormatPolicy(tune, candidates=WEIGHT_CANDIDATES,
                                         profile_iters=3))
-            fmt = policy.select(coo).best
-        return cls(DynamicMatrix(convert(coo, fmt, **conv_kwargs)), bias)
+            fmt = policy.select(coo, op="spmm_t", ncols=ncols).best
+        return cls(DynamicMatrix(convert(coo, fmt, **conv_kwargs)), bias,
+                   backend=backend)
 
     @property
     def format(self) -> Format:
@@ -66,23 +82,39 @@ class LinearSparse:
 
     def activate(self, fmt: Format, **kw) -> "LinearSparse":
         """Runtime format switch (paper activate())."""
-        return LinearSparse(self.weight.activate(fmt, **kw), self.bias)
+        return LinearSparse(self.weight.activate(fmt, **kw), self.bias,
+                            backend=self.backend)
+
+    def retune(self, ncols: int, tune="profile", **conv_kwargs) -> "LinearSparse":
+        """Re-select the weight's format for a new batch width and switch
+        to it — the serving-loop hook for decode->prefill transitions
+        (``activate()`` between steps; the switch is the device-resident
+        numeric phase)."""
+        policy = (tune if isinstance(tune, FormatPolicy)
+                  else FormatPolicy(tune, candidates=WEIGHT_CANDIDATES,
+                                    profile_iters=3))
+        fmt = policy.select(self.weight, op="spmm_t", ncols=ncols).best
+        if fmt == self.format:
+            return self
+        return self.activate(fmt, **conv_kwargs)
 
     def __call__(self, x):
-        """x: (..., d_in) -> (..., d_out): y^T = W^T x^T via spmm."""
+        """x: (..., d_in) -> (..., d_out) via the transposed-rhs SpMM —
+        activations stay row-major on both sides (the old
+        ``spmm(W, x.T).T`` round-trip copied them twice per layer)."""
         shape = x.shape
         xf = x.reshape(-1, shape[-1])  # (T, d_in)
-        y = spmm(self.weight, xf.T).T  # weight stored (d_out, d_in)
+        y = spmm_t(self.weight, xf, backend=self.backend)
         if self.bias is not None:
             y = y + self.bias
         return y.reshape(shape[:-1] + (y.shape[-1],))
 
     def tree_flatten(self):
-        return (self.weight, self.bias), None
+        return (self.weight, self.bias), self.backend
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1])
+        return cls(children[0], children[1], backend=aux or "auto")
 
     def __repr__(self):
         return f"LinearSparse<{self.format.name}>{self.weight.shape}"

@@ -282,6 +282,55 @@ class Model:
         return tfm.forward(params, batch, self.cfg, logits_mode="last",
                            remat=False, **kw)
 
+    def supports_prefill_cache(self) -> bool:
+        """Whether :meth:`prefill_cache` is available: attention families
+        with a token frontend (the kv cache is addressable by position;
+        ssm/hybrid recurrent state must be built by stepping)."""
+        return self.cfg.family in ("dense", "moe")
+
+    def prefill_cache(self, params, cache, tokens, slots, lengths):
+        """ONE jit'd forward that primes the decode cache for R prompts.
+
+        tokens: (R, P) right-padded prompt rows; slots: (R,) batch rows of
+        ``cache`` to fill; lengths: (R,) true prompt lengths (<= P).
+        Returns (last_logits (R, V), cache) — the logits at each prompt's
+        final real token, i.e. what the first ``decode_step`` needs.
+
+        The causal forward collects every layer's projected (k, v) via the
+        scan's ys (``collect_kv``) and scatters them into cache rows —
+        replacing the per-token prefill-by-decode loop (P sequential
+        decode_steps, each touching the whole cache) with a single
+        chunked-flash pass. Positions >= length hold kv computed from pad
+        tokens; that is safe because ``decode_attention`` masks to
+        ``arange <= pos`` and overwrites each slot before first attending
+        it — a pad entry is never read.
+        """
+        cfg = self.cfg
+        if not self.supports_prefill_cache():
+            raise ValueError(f"{cfg.family} has no batched cache prefill")
+        p_len = tokens.shape[1]
+        x, _, (k, v) = tfm.forward(params, {"tokens": tokens}, cfg,
+                                   logits_mode="none", remat=False,
+                                   collect_kv=True)
+        # k/v: (L, R, P, KV, hd); cache["k"]: (L, B, S_max, KV, hd)
+        if "k_scale" in cache:
+            kq, ks = attn._quantize_kv(k)
+            vq, vs = attn._quantize_kv(v)
+            cache = dict(cache,
+                         k=cache["k"].at[:, slots, :p_len].set(kq),
+                         v=cache["v"].at[:, slots, :p_len].set(vq),
+                         k_scale=cache["k_scale"].at[:, slots, :p_len].set(ks),
+                         v_scale=cache["v_scale"].at[:, slots, :p_len].set(vs))
+        else:
+            kv_dt = cache["k"].dtype
+            cache = dict(cache,
+                         k=cache["k"].at[:, slots, :p_len].set(k.astype(kv_dt)),
+                         v=cache["v"].at[:, slots, :p_len].set(v.astype(kv_dt)))
+        last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)  # (R,1,d)
+        logits = unembed_apply(params["unembed"], last)[:, 0]
+        return logits, cache
+
 
 def build_model(cfg: ArchConfig) -> Model:
     return Model(cfg)

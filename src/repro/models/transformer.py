@@ -53,17 +53,19 @@ def _attn_block_specs(cfg) -> dict:
 
 
 def _attn_block(p, x, cfg, *, causal, positions=None, q_chunk, kv_chunk,
-                unroll=False):
-    h, _ = attn.attention_block(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
-                                cfg, causal=causal, positions=positions,
-                                q_chunk=q_chunk, kv_chunk=kv_chunk,
-                                unroll=unroll)
+                unroll=False, return_kv=False):
+    h, kv = attn.attention_block(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                 cfg, causal=causal, positions=positions,
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                 unroll=unroll, return_kv=return_kv)
     x = x + h
     hin = rms_norm(x, p["ln2"], cfg.norm_eps)
     if cfg.family == "moe":
         h, aux = moe_mod.moe_apply(p["moe"], hin, cfg)
     else:
         h, aux = mlp_apply(p["mlp"], hin, cfg.mlp_act), jnp.zeros((), jnp.float32)
+    if return_kv:
+        return x + h, aux, kv
     return x + h, aux
 
 
@@ -145,32 +147,46 @@ def _embed_inputs(params, batch, cfg, dtype):
 
 def forward(params, batch, cfg, *, remat: bool = True,
             q_chunk: int = 512, kv_chunk: int = 1024,
-            logits_mode: str = "all", unroll: bool = False):
+            logits_mode: str = "all", unroll: bool = False,
+            collect_kv: bool = False):
     """Full-sequence forward. Returns (logits, aux_loss).
 
     logits_mode: 'all' (training CE) | 'last' (prefill serving) | 'none'.
     unroll: Python-loop layers + attention kv chunks instead of lax.scan —
     used by the roofline cost-compiles so XLA cost analysis sees every
     FLOP (scan bodies are otherwise counted once; see dryrun.py).
+    collect_kv: additionally return every layer's projected (k, v) as the
+    scan's stacked ys — (L, B, S, KV, hd) each — so a serving prefill can
+    prime the decode cache from ONE forward instead of S decode steps.
+    Attention families only (ssm/hybrid state is positional, not a kv
+    cache); the return becomes (out, aux, (k, v)).
     """
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     x, positions = _embed_inputs(params, batch, cfg, dtype)
     x = constrain(x, "act")
     causal = not cfg.encoder_only
+    if collect_kv and cfg.family not in ("dense", "moe", "vlm", "audio"):
+        raise ValueError(f"collect_kv: {cfg.family} has no kv cache — "
+                         "prefill ssm/hybrid families by decode steps")
 
+    kvs = None
     if cfg.family in ("dense", "moe", "vlm", "audio"):
         def body(carry, pl):
             x, aux = carry
-            x, a = _attn_block(pl, x, cfg, causal=causal, positions=positions,
-                               q_chunk=q_chunk, kv_chunk=kv_chunk,
-                               unroll=unroll)
-            return (constrain(x, "act"), aux + a), None
+            out = _attn_block(pl, x, cfg, causal=causal, positions=positions,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              unroll=unroll, return_kv=collect_kv)
+            if collect_kv:
+                x, a, kv = out
+            else:
+                (x, a), kv = out, None
+            return (constrain(x, "act"), aux + a), kv
         body = jax.checkpoint(body) if remat else body
         carry0 = (x, jnp.zeros((), jnp.float32))
         if unroll:
             (x, aux) = _python_scan(body, carry0, params["blocks"], cfg.n_layers)
         else:
-            (x, aux), _ = jax.lax.scan(body, carry0, params["blocks"])
+            (x, aux), kvs = jax.lax.scan(body, carry0, params["blocks"])
     elif cfg.family == "ssm":
         def body(carry, pl):
             x, aux = carry
@@ -214,10 +230,13 @@ def forward(params, batch, cfg, *, remat: bool = True,
     else:
         raise ValueError(cfg.family)
 
+    if collect_kv and kvs is None:  # unroll path has no scan ys
+        raise ValueError("collect_kv requires the lax.scan layer loop "
+                         "(unroll=False)")
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)
     if logits_mode == "none":
-        return x, aux
+        return (x, aux, kvs) if collect_kv else (x, aux)
     if logits_mode == "last":
         x = x[:, -1:, :]
     logits = constrain(unembed_apply(params["unembed"], x), "logits")
-    return logits, aux
+    return (logits, aux, kvs) if collect_kv else (logits, aux)

@@ -171,9 +171,15 @@ class SelectionCache:
 
     @staticmethod
     def key(feats: PatternFeatures, candidates: Sequence[Format],
-            backend: str, device_kind: str) -> str:
+            backend: str, device_kind: str, op_ctx: str = "") -> str:
+        """``op_ctx`` carries the operation context (e.g. ``"spmm-b8"``:
+        op + rhs-width bucket) for selections that depend on the
+        *computation*, not just the pattern — per Stylianou et al.
+        (arXiv:2303.05098). Empty for SpMV, so historical keys are
+        untouched and old caches keep answering."""
         cand = "-".join(Format(c).name for c in candidates)
-        return f"{pattern_signature(feats)}|{backend}|{device_kind}|{cand}"
+        base = f"{pattern_signature(feats)}|{backend}|{device_kind}|{cand}"
+        return f"{base}|{op_ctx}" if op_ctx else base
 
     def get(self, key: str) -> Optional[Format]:
         value = self._load().get(key)

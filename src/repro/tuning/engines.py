@@ -153,7 +153,8 @@ def profile_select(A, x,
                    iters: int = 10, backend: str = "ref",
                    conv_kwargs: Optional[dict] = None,
                    inner: int = 4,
-                   backends: Optional[Sequence[str]] = None) -> TuneReport:
+                   backends: Optional[Sequence[str]] = None,
+                   op: str = "spmv") -> TuneReport:
     """The paper's profiling auto-tuner: convert, compile, time, pick best.
 
     ``backends`` extends the search from formats to (format, backend)
@@ -163,10 +164,18 @@ def profile_select(A, x,
     the report's ``backend``/``cfg`` record the winning pair. Default
     (None) keeps the historical ref-only behaviour — ``times`` stays
     keyed by Format either way, holding each format's best time.
+
+    ``op`` selects the computation profiled: ``"spmv"`` with vector ``x``,
+    ``"spmm"`` with rhs ``x`` of shape (N, K), or ``"spmm_t"`` with
+    activations ``x`` of shape (T, N) — the measurement (and hence the
+    winning format) genuinely depends on the batch width, which is the
+    mechanism behind width-keyed format selection.
     """
     A = A.concrete if isinstance(A, DynamicMatrix) else A
     conv_kwargs = conv_kwargs or {}
     backends = tuple(backends) if backends is not None else (backend,)
+    op_fn = {"spmv": _ops.spmv, "spmm": _ops.spmm, "spmm_t": _ops.spmm_t}[op]
+    ncols = None if op == "spmv" else (x.shape[1] if op == "spmm" else x.shape[0])
     times: Dict[Format, float] = {}
     winner: Dict[Format, tuple] = {}
     skipped: Dict[str, str] = {}
@@ -186,14 +195,17 @@ def profile_select(A, x,
             cfg = None
             if b == "pallas":
                 from repro.kernels import ops as kops
-                if type(Af) not in kops.SPMV_PALLAS:
+                registry = {"spmv": kops.SPMV_PALLAS,
+                            "spmm": kops.SPMM_PALLAS,
+                            "spmm_t": kops.SPMM_T_PALLAS}[op]
+                if type(Af) not in registry:
                     # no kernel for this format: timing "pallas" would just
                     # re-run the ref fallback and could record a phantom win
                     continue
                 from repro.tuning import kernel_tune
-                rec = kernel_tune.best_config(Af)
+                rec = kernel_tune.best_config(Af, op=op, ncols=ncols)
                 cfg = dict(rec.cfg) if rec is not None else None
-            fn = jax.jit(lambda a, v, b=b, cfg=cfg: _ops.spmv(
+            fn = jax.jit(lambda a, v, b=b, cfg=cfg: op_fn(
                 a, v, backend=b, cfg=cfg))
             t = time_fn(fn, Af, x, iters=iters, inner=inner)
             if fmt not in times or t < times[fmt]:

@@ -70,7 +70,7 @@ class KernelRecord:
     """
 
     fmt: str            # Format name
-    op: str             # "spmv" | "spmm"
+    op: str             # "spmv" | "spmm" | "spmm_t"
     cfg: dict           # kernel kwargs (tm/tk/layout/tn/...)
     kernel_us: float    # best measured time of cfg, microseconds
     ref_us: float       # reference-path time on the same matrix
@@ -121,10 +121,23 @@ def _device_kind() -> str:
         return "unknown"
 
 
+def rhs_bucket(ncols: Optional[int]) -> str:
+    """Pow2 bucket of the rhs batch width — part of the spmm/spmm_t key.
+    ``None`` means "width not stated" and lands in the b=1 bucket, so a
+    forgetful caller reads and writes the narrow-decode record
+    consistently rather than aliasing every width onto one entry."""
+    return f"b{_lg(ncols or 1)}"
+
+
 def kernel_key(fmt: Format, m: int, n: int, nnz: int, op: str = "spmv",
-               backend: Optional[str] = None) -> str:
+               backend: Optional[str] = None,
+               ncols: Optional[int] = None) -> str:
+    """The spmm ops carry the rhs-width bucket in the key (a winner tuned
+    at b=1 is never replayed at b=256); spmv keys are unchanged, so
+    records tuned before the width axis existed stay valid."""
+    width = f"|{rhs_bucket(ncols)}" if op in ("spmm", "spmm_t") else ""
     return (f"{KERNEL_NS}:v{KERNEL_SCHEMA}|{op}|{Format(fmt).name}|"
-            f"{shape_bucket(m, n, nnz)}|{backend or backend_tag()}|"
+            f"{shape_bucket(m, n, nnz)}{width}|{backend or backend_tag()}|"
             f"{_device_kind()}")
 
 
@@ -159,24 +172,28 @@ def default_kernel_cache() -> SelectionCache:
 
 
 def best_config(A, backend: Optional[str] = None, *, op: str = "spmv",
+                ncols: Optional[int] = None,
                 cache: Optional[SelectionCache] = None) -> Optional[KernelRecord]:
-    """Cached winner for ``A``'s (format, shape bucket) on ``backend``
-    (default: the running process's tag). Pure lookup — never measures."""
+    """Cached winner for ``A``'s (format, shape bucket[, rhs-width bucket])
+    on ``backend`` (default: the running process's tag). Pure lookup —
+    never measures."""
     fmt = getattr(A, "format", None)
     if fmt is None:
         return None
     nnz = max(1, int(getattr(A, "nnz", 1)))
     return best_config_for(Format(fmt), A.shape[0], A.shape[1], nnz,
-                           backend=backend, op=op, cache=cache)
+                           backend=backend, op=op, ncols=ncols, cache=cache)
 
 
 def best_config_for(fmt: Format, m: int, n: int, nnz: int,
                     backend: Optional[str] = None, *, op: str = "spmv",
+                    ncols: Optional[int] = None,
                     cache: Optional[SelectionCache] = None
                     ) -> Optional[KernelRecord]:
     # NB: "cache or ..." would misfire — an *empty* SelectionCache is falsy
     cache = cache if cache is not None else default_kernel_cache()
-    raw = cache.get_raw(kernel_key(fmt, m, n, nnz, op=op, backend=backend))
+    raw = cache.get_raw(kernel_key(fmt, m, n, nnz, op=op, backend=backend,
+                                   ncols=ncols))
     if raw is None:
         return None
     rec = KernelRecord.from_json(raw)
@@ -190,28 +207,54 @@ def best_config_for(fmt: Format, m: int, n: int, nnz: int,
 # ---------------------------------------------------------------------------
 
 
-def default_grid(A, smoke: bool = False) -> List[dict]:
+def default_grid(A, smoke: bool = False, op: str = "spmv",
+                 ncols: Optional[int] = None) -> List[dict]:
     """The small per-format tile grid :func:`tune_kernel` searches.
 
     ``smoke=True`` shrinks it to 2-3 configs for CI self-checks. Grids
     always include the density-heuristic default so the tuner can only
-    improve on the untuned path.
+    improve on the untuned path. The spmm ops add the ``tn`` rhs-tile
+    axis: candidates bracket the (pow2) batch width, so a b=256 sweep
+    tries both one wide slab and split rhs tiles.
     """
     from repro.kernels import ops as kops
 
     # one quantizer for grid generation and the defaults it must include
     _pow2ceil = kops._pow2_clamp
     m = A.shape[0]
-    base = kops.default_config(A)
+    spmm = op in ("spmm", "spmm_t")
+    base = kops.default_config(A, op=op, ncols=ncols)
     if isinstance(A, CSR):
-        if smoke:
+        if spmm:
+            tn0 = kops._rhs_tile(ncols)
+            tns = sorted({tn0, max(1, tn0 // 8)})
+            if smoke:
+                grid = [base] + [{"tm": 128, "tk": 256, "tn": tn}
+                                 for tn in tns]
+            else:
+                tms = sorted({128, 256, _pow2ceil(min(m, 1024), 128, 1024)})
+                grid = [base] + [{"tm": tm, "tk": tk, "tn": tn}
+                                 for tm in tms for tk in (512, 2048)
+                                 for tn in tns]
+        elif smoke:
             grid = [base, {"tm": 128, "tk": 256}]
         else:
             tms = sorted({128, 256, _pow2ceil(min(m, 1024), 128, 1024)})
             tks = (512, 2048, 4096)
             grid = [base] + [{"tm": tm, "tk": tk} for tm in tms for tk in tks]
     elif isinstance(A, ELL):
-        if smoke:
+        if spmm:
+            tn0 = kops._rhs_tile(ncols)
+            lays = ("row", "col")
+            if smoke:
+                grid = [base] + [{"tm": 128, "layout": lay, "tn": tn0}
+                                 for lay in lays]
+            else:
+                tms = sorted({256, _pow2ceil(min(m, 1024), 128, 8192)})
+                grid = [base] + [{"tm": tm, "layout": lay, "tn": tn}
+                                 for tm in tms for lay in lays
+                                 for tn in sorted({tn0, max(1, tn0 // 8)})]
+        elif smoke:
             grid = [base, {"tm": 128, "layout": "row"},
                     {"tm": 128, "layout": "col"}]
         else:
@@ -224,8 +267,12 @@ def default_grid(A, smoke: bool = False) -> List[dict]:
     elif isinstance(A, BSR):
         grid = [base] + ([] if smoke else [{"tn": 256}])
     elif isinstance(A, HYB):
-        sub = default_grid(A.ell, smoke=smoke)
-        grid = [{"ell": g} for g in sub]
+        sub = default_grid(A.ell, smoke=smoke, op=op, ncols=ncols)
+        if spmm:
+            csr_sub = base.get("csr", {})
+            grid = [{"ell": g, "csr": csr_sub} for g in sub]
+        else:
+            grid = [{"ell": g} for g in sub]
     else:
         grid = [base]
     # dedup while keeping order (the heuristic default may recur in the grid)
@@ -262,6 +309,7 @@ def tune_kernel(A, x=None, *, op: str = "spmv",
     # A is closed over (not a jit argument): wrappers with host-side
     # preconditions (BSR's indptr scan) need the concrete arrays, and the
     # operand-only signature matches how a solver-jitted SpMV sees them.
+    ncols = None
     if op == "spmv":
         if x is None:
             x = jnp.ones((A.shape[1],), A.dtype)
@@ -271,16 +319,25 @@ def tune_kernel(A, x=None, *, op: str = "spmv",
     elif op == "spmm":
         if x is None:
             x = jnp.ones((A.shape[1], B_cols), A.dtype)
+        ncols = x.shape[1]
         ref_fn = jax.jit(lambda b: _ops.spmm(A, b, backend="ref"))
         run = lambda cfg: jax.jit(
             lambda b: _ops.spmm(A, b, backend="pallas", cfg=cfg))
+    elif op == "spmm_t":
+        if x is None:
+            x = jnp.ones((B_cols, A.shape[1]), A.dtype)
+        ncols = x.shape[0]
+        ref_fn = jax.jit(lambda b: _ops.spmm_t(A, b, backend="ref"))
+        run = lambda cfg: jax.jit(
+            lambda b: _ops.spmm_t(A, b, backend="pallas", cfg=cfg))
     else:
-        raise ValueError(f"op {op!r} not in ('spmv', 'spmm')")
+        raise ValueError(f"op {op!r} not in ('spmv', 'spmm', 'spmm_t')")
 
     ref_t = time_fn(ref_fn, x, iters=iters, inner=inner)
     times: Dict[str, float] = {}
     cfgs: Dict[str, dict] = {}
-    for cfg in (grid if grid is not None else default_grid(A)):
+    search = grid if grid is not None else default_grid(A, op=op, ncols=ncols)
+    for cfg in search:
         key = json.dumps(cfg, sort_keys=True)
         times[key] = time_fn(run(cfg), x, iters=iters, inner=inner)
         cfgs[key] = cfg
@@ -289,7 +346,7 @@ def tune_kernel(A, x=None, *, op: str = "spmv",
                        kernel_us=times[best_key] * 1e6, ref_us=ref_t * 1e6)
     nnz = max(1, int(getattr(A, "nnz", 1)))
     cache.put_raw(kernel_key(Format(A.format), A.shape[0], A.shape[1], nnz,
-                             op=op), rec.to_json())
+                             op=op, ncols=ncols), rec.to_json())
     return rec
 
 
@@ -355,6 +412,22 @@ def run_smoke(cache_path: str, iters: int = 3, inner: int = 2) -> List[KernelRec
             y_ref = _ops.spmv(A, x, backend="ref")
             np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_ref),
                                        rtol=1e-4, atol=1e-4)
+        # rhs-width isolation: an spmm record tuned at b=1 must be found
+        # in the b=1 bucket and invisible to a b=256 lookup.
+        A = _suite(smoke=True)[0]
+        b1 = jnp.ones((A.shape[1], 1), A.dtype)
+        rec = tune_kernel(A, b1, op="spmm", cache=cache,
+                          grid=default_grid(A, smoke=True, op="spmm", ncols=1),
+                          iters=iters, inner=inner)
+        recs.append(rec)
+        fresh = SelectionCache(cache_path)
+        assert best_config(A, op="spmm", ncols=1, cache=fresh) is not None
+        assert best_config(A, op="spmm", ncols=256, cache=fresh) is None, \
+            "a b=1 spmm record leaked into the b=256 bucket"
+        B = jnp.arange(A.shape[1] * 8, dtype=A.dtype).reshape(A.shape[1], 8)
+        np.testing.assert_allclose(
+            np.asarray(_ops.spmm(A, B, backend="auto")),
+            np.asarray(_ops.spmm(A, B, backend="ref")), rtol=1e-4, atol=1e-4)
         return recs
     finally:
         if prev is None:

@@ -80,26 +80,40 @@ class FormatPolicy:
 
     # -- selection ----------------------------------------------------------
 
-    def select(self, A, x=None) -> TuneReport:
+    def select(self, A, x=None, op: str = "spmv",
+               ncols: Optional[int] = None) -> TuneReport:
         """Pick a format for ``A`` (a concrete container or DynamicMatrix).
 
-        ``x`` is only used by profile mode (synthesized as ones when absent).
+        ``x`` is only used by profile mode (synthesized as ones when
+        absent). ``op``/``ncols`` state the *computation* the pick is for
+        — ``op="spmm"``/``"spmm_t"`` with the rhs batch width makes the
+        decision batch-width-aware: profile mode measures the actual SpMM
+        at that width, cached mode keys the stored decision by
+        (op, width bucket), and the pinned kernel config comes from the
+        matching width bucket. The default (``"spmv"``) preserves the
+        historical pattern-only behaviour and cache keys.
         """
         if _trace.mode() == "off":
-            return self._select(A, x)
-        with _trace.span("select.policy", mode=self.mode) as sp:
-            rep = self._select(A, x)
+            return self._select(A, x, op, ncols)
+        with _trace.span("select.policy", mode=self.mode, op=op) as sp:
+            rep = self._select(A, x, op, ncols)
             sp.set(chosen=Format(rep.best).name, tier=rep.mode,
                    backend=rep.backend or "auto")
         return rep
 
-    def _select(self, A, x=None) -> TuneReport:
+    def _select(self, A, x=None, op: str = "spmv",
+                ncols: Optional[int] = None) -> TuneReport:
         A = A.concrete if isinstance(A, DynamicMatrix) else A
         if self.mode == "profile":
             if x is None:
-                x = jnp.ones((A.shape[1],), A.dtype)
+                if op == "spmm":
+                    x = jnp.ones((A.shape[1], ncols or 1), A.dtype)
+                elif op == "spmm_t":
+                    x = jnp.ones((ncols or 1, A.shape[1]), A.dtype)
+                else:
+                    x = jnp.ones((A.shape[1],), A.dtype)
             return profile_select(A, x, candidates=self.candidates,
-                                  iters=self.profile_iters)
+                                  iters=self.profile_iters, op=op)
 
         feats = PatternFeatures.from_coo(_to_coo_fn(A))
         if self.mode == "analytic":
@@ -111,7 +125,7 @@ class FormatPolicy:
         from repro.tuning import kernel_tune
 
         key = SelectionCache.key(feats, self.candidates, jax.default_backend(),
-                                 _device_kind())
+                                 _device_kind(), op_ctx=_op_ctx(op, ncols))
         hit = self.cache.get_decision(key)
         if hit is not None and hit[0] in self.candidates:
             fmt, kb, cfg, tag = hit
@@ -119,10 +133,10 @@ class FormatPolicy:
                 # the pinned (backend, cfg) was measured under a different
                 # kernel-execution mode (interp vs native): never replay it —
                 # re-derive the pin from this mode's kernel records instead.
-                kb, cfg = self._kernel_decision(fmt, feats)
+                kb, cfg = self._kernel_decision(fmt, feats, op=op, ncols=ncols)
             return TuneReport(fmt, {}, "cached", backend=kb, cfg=cfg)
         rep = self._select_ml(feats)
-        kb, cfg = self._kernel_decision(rep.best, feats)
+        kb, cfg = self._kernel_decision(rep.best, feats, op=op, ncols=ncols)
         self.cache.put_decision(key, rep.best, kb, cfg,
                                 tag=kernel_tune.backend_tag() if kb else None)
         return TuneReport(rep.best, rep.times, f"cached-miss:{rep.mode}",
@@ -206,11 +220,13 @@ class FormatPolicy:
             fmt = self.select(A, x=x).best
         return _plan_switch(A, Format(fmt), **hints)
 
-    def _kernel_decision(self, fmt: Format, feats: PatternFeatures):
+    def _kernel_decision(self, fmt: Format, feats: PatternFeatures,
+                         op: str = "spmv", ncols: Optional[int] = None):
         """(backend, cfg) to pin alongside a format pick: the tuned Pallas
-        tile config for the pattern's shape bucket when one is cached AND
-        measured faster than ref; (None, None) otherwise — the decision
-        stays format-only and ``spmv(backend="auto")`` routes per call.
+        tile config for the pattern's (shape bucket[, rhs-width bucket])
+        when one is cached AND measured faster than ref; (None, None)
+        otherwise — the decision stays format-only and
+        ``spmv(backend="auto")`` routes per call.
 
         The lookup goes through *this policy's* cache: format selections
         and kernel records share one JSON store, so a policy configured
@@ -219,8 +235,8 @@ class FormatPolicy:
         from repro.tuning import kernel_tune
 
         rec = kernel_tune.best_config_for(Format(fmt), feats.m, feats.n,
-                                          max(1, feats.nnz),
-                                          cache=self.cache)
+                                          max(1, feats.nnz), op=op,
+                                          ncols=ncols, cache=self.cache)
         if rec is not None and rec.speedup >= 1.0:
             return "pallas", dict(rec.cfg)
         return None, None
@@ -233,6 +249,15 @@ class FormatPolicy:
                 return TuneReport(fmt, {}, "ml")
         # no tree shipped, or it predicts a format outside the candidate set
         return analytic_select(feats.to_stats(), candidates=self.candidates)
+
+
+def _op_ctx(op: str, ncols: Optional[int]) -> str:
+    """Cache-key op context: empty for spmv (historical keys unchanged),
+    ``"spmm-b<lg width>"`` for the batched ops."""
+    if op == "spmv":
+        return ""
+    from repro.tuning import kernel_tune
+    return f"{op}-{kernel_tune.rhs_bucket(ncols)}"
 
 
 def _device_kind() -> str:

@@ -225,3 +225,93 @@ def test_profile_select_over_backends(tmp_path, monkeypatch):
     # historical call shape stays format-only
     rep1 = profile_select(A, x, candidates=(Format.DIA,), iters=2, inner=1)
     assert rep1.backend is None and rep1.cfg is None
+
+
+# ---------------------------------------------------------------------------
+# rhs-width bucket: a record tuned at b=1 is never replayed at b=256
+# ---------------------------------------------------------------------------
+
+
+def test_spmm_keys_carry_width_bucket():
+    k1 = kt.kernel_key(Format.CSR, 1024, 1024, 4096, op="spmm", ncols=1)
+    k256 = kt.kernel_key(Format.CSR, 1024, 1024, 4096, op="spmm", ncols=256)
+    assert k1 != k256 and "|b0|" in k1 and "|b8|" in k256
+    # ncols=None aliases with the b=1 bucket (read/write consistent)
+    assert kt.kernel_key(Format.CSR, 1024, 1024, 4096, op="spmm") == k1
+    # spmv keys never grew a width segment (historical records stay valid)
+    s = kt.kernel_key(Format.CSR, 1024, 1024, 4096, op="spmv", ncols=256)
+    assert s == kt.kernel_key(Format.CSR, 1024, 1024, 4096, op="spmv")
+    # widths in one pow2 bucket share a record; different ops never do
+    assert kt.kernel_key(Format.CSR, 1024, 1024, 4096, op="spmm", ncols=200) \
+        == kt.kernel_key(Format.CSR, 1024, 1024, 4096, op="spmm", ncols=256)
+    assert kt.kernel_key(Format.CSR, 1024, 1024, 4096, op="spmm_t", ncols=1) \
+        != k1
+
+
+def test_b1_record_not_consulted_at_b256(tmp_path):
+    """The regression the width axis exists to prevent: tune at b=1, then
+    look up at b=256 — the narrow record must be invisible."""
+    cache = SelectionCache(str(tmp_path / "k.json"))
+    A = convert(random_coo(0, (256, 256), 0.05), Format.CSR)
+    rec = kt.tune_kernel(A, op="spmm", B_cols=1, cache=cache,
+                         grid=[{"tm": 128, "tk": 256, "tn": 1}],
+                         iters=1, inner=1)
+    assert rec.cfg["tn"] == 1
+    assert kt.best_config(A, op="spmm", ncols=1, cache=cache) is not None
+    assert kt.best_config(A, op="spmm", ncols=256, cache=cache) is None
+    assert kt.best_config(A, op="spmm", cache=cache) is not None  # b0 alias
+    # the spmm record is invisible to every other op too
+    assert kt.best_config(A, op="spmv", cache=cache) is None
+    assert kt.best_config(A, op="spmm_t", ncols=1, cache=cache) is None
+
+
+def test_auto_route_respects_width_bucket(tmp_path, monkeypatch):
+    """spmm(backend="auto") consults the record for ITS width bucket: a
+    winner at b=1 routes pallas at b=1 but ref at b=256."""
+    monkeypatch.setenv(CACHE_PATH_ENV, str(tmp_path / "sel.json"))
+    A = convert(random_coo(1, (128, 128), 0.1), Format.CSR)
+    rec = kt.KernelRecord("CSR", "spmm", {"tm": 128, "tk": 256, "tn": 1},
+                          kernel_us=1.0, ref_us=100.0)
+    kt.default_kernel_cache().put_raw(
+        kt.kernel_key(Format.CSR, 128, 128, int(A.nnz), op="spmm", ncols=1),
+        rec.to_json())
+    assert core_ops.kernel_route(A, op="spmm", ncols=1) == \
+        ("pallas", {"tm": 128, "tk": 256, "tn": 1})
+    assert core_ops.kernel_route(A, op="spmm", ncols=256) == ("ref", None)
+    # and the full op agrees with ref numerics on both routes
+    B1 = jnp.ones((128, 1), jnp.float32)
+    B256 = jnp.ones((128, 256), jnp.float32)
+    for B in (B1, B256):
+        np.testing.assert_allclose(
+            np.asarray(core_ops.spmm(A, B, backend="auto")),
+            np.asarray(core_ops.spmm(A, B, backend="ref")),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_cached_policy_width_buckets_store_distinct_decisions(tmp_path,
+                                                              monkeypatch):
+    """FormatPolicy("cached") keys spmm_t decisions by width bucket: a
+    pallas pin recorded at b=1 must not leak into the b=256 decision."""
+    monkeypatch.setenv(CACHE_PATH_ENV, str(tmp_path / "sel.json"))
+    A = random_coo(2, (256, 256), 0.05)
+    fmt = FormatPolicy("ml").select(A).best
+    feats = PatternFeatures.from_coo(A)
+    rec = kt.KernelRecord(fmt.name, "spmm_t", {"tm": 128, "tn": 1},
+                          kernel_us=1.0, ref_us=100.0)
+    kt.default_kernel_cache().put_raw(
+        kt.kernel_key(fmt, feats.m, feats.n, feats.nnz, op="spmm_t",
+                      ncols=1), rec.to_json())
+    cache = SelectionCache(str(tmp_path / "sel.json"))
+    narrow = FormatPolicy("cached", cache=cache).select(A, op="spmm_t",
+                                                        ncols=1)
+    wide = FormatPolicy("cached", cache=cache).select(A, op="spmm_t",
+                                                      ncols=256)
+    assert narrow.backend == "pallas" and narrow.cfg == {"tm": 128, "tn": 1}
+    assert wide.backend is None  # no b=256 measurement -> no pin
+    # both are warm on re-read, from distinct cache entries
+    warm_n = FormatPolicy("cached", cache=cache).select(A, op="spmm_t",
+                                                        ncols=1)
+    warm_w = FormatPolicy("cached", cache=cache).select(A, op="spmm_t",
+                                                        ncols=256)
+    assert warm_n.mode == "cached" and warm_n.backend == "pallas"
+    assert warm_w.mode == "cached" and warm_w.backend is None

@@ -310,3 +310,75 @@ def test_vmem_budget_fallback():
     x = jnp.ones((n,), jnp.float32)
     y = kops.dia_spmv(A, x)
     assert np.isfinite(np.asarray(y)).all()
+
+
+# ---------------------------------------------------------------------------
+# SpMM / transposed-rhs SpMM: rhs-width sweeps vs the dense oracle
+# ---------------------------------------------------------------------------
+
+SPMM_SHAPES = [((64, 64), 0.1), ((300, 257), 0.05), ((128, 512), 0.02)]
+
+
+@pytest.mark.parametrize("shape,density", SPMM_SHAPES)
+@pytest.mark.parametrize("b", [1, 5, 16])
+def test_csr_spmm_sweep(shape, density, b):
+    A = convert(random_coo(3, shape, density), Format.CSR)
+    B = jnp.asarray(RNG.standard_normal((shape[1], b)).astype(np.float32))
+    y = kops.csr_spmm(A, B)
+    np.testing.assert_allclose(np.asarray(y), to_dense_np(A) @ np.asarray(B),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape,density", SPMM_SHAPES)
+@pytest.mark.parametrize("b", [1, 5, 16])
+def test_csr_spmm_t_sweep(shape, density, b):
+    A = convert(random_coo(4, shape, density), Format.CSR)
+    X = jnp.asarray(RNG.standard_normal((b, shape[1])).astype(np.float32))
+    y = kops.csr_spmm_t(A, X)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(X) @ to_dense_np(A).T,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("layout", ["row", "col"])
+@pytest.mark.parametrize("b", [1, 7, 16])
+def test_ell_spmm_sweep(layout, b):
+    A = convert(random_coo(5, (200, 160), 0.05), Format.ELL)
+    B = jnp.asarray(RNG.standard_normal((160, b)).astype(np.float32))
+    y = kops.ell_spmm(A, B, layout=layout)
+    np.testing.assert_allclose(np.asarray(y), to_dense_np(A) @ np.asarray(B),
+                               rtol=1e-4, atol=1e-4)
+    X = jnp.asarray(RNG.standard_normal((b, 160)).astype(np.float32))
+    yt = kops.ell_spmm_t(A, X, layout=layout)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(X) @ to_dense_np(A).T,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", [1, 9])
+def test_hyb_spmm_sweep(b):
+    # skewed rows so the COO tail is non-empty
+    d = np.zeros((96, 80), np.float32)
+    d[:, :2] = RNG.standard_normal((96, 2))
+    d[0, :] = RNG.standard_normal(80)
+    A = convert(coo_from_dense_np(d), Format.HYB)
+    assert int(A.coo.nnz) > 0
+    B = jnp.asarray(RNG.standard_normal((80, b)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(kops.hyb_spmm(A, B)),
+                               d @ np.asarray(B), rtol=1e-4, atol=1e-4)
+    X = jnp.asarray(RNG.standard_normal((b, 80)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(kops.hyb_spmm_t(A, X)),
+                               np.asarray(X) @ d.T, rtol=1e-4, atol=1e-4)
+
+
+def test_core_spmm_t_backends_agree():
+    from repro.core import spmm_t
+    A = convert(random_coo(6, (128, 96), 0.08), Format.CSR)
+    X = jnp.asarray(RNG.standard_normal((4, 96)).astype(np.float32))
+    y_ref = spmm_t(A, X, backend="ref")
+    y_pal = spmm_t(A, X, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    # ref path IS the double transpose it replaced at the layer level
+    from repro.core import spmm
+    np.testing.assert_allclose(np.asarray(y_ref),
+                               np.asarray(spmm(A, X.T, backend="ref").T),
+                               rtol=1e-6, atol=1e-6)

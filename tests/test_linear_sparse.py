@@ -61,3 +61,28 @@ def test_bandwidth_savings_model():
     for density in (0.5, 0.25, 0.1):
         layer = LinearSparse.from_dense(prune_magnitude(w, density), fmt=Format.CSR)
         assert bytes_of(layer.weight.concrete) < dense_bytes * (density * 2 + 0.1)
+
+
+@pytest.mark.parametrize("fmt", [Format.CSR, Format.ELL, Format.HYB, Format.COO])
+def test_call_matches_old_double_transpose_path(fmt):
+    """The transposed-rhs fast path replaced ``spmm(W, x.T).T``; the two
+    formulations must stay interchangeable for every weight format."""
+    from repro.core import spmm
+    w = prune_magnitude(RNG.standard_normal((40, 56)).astype(np.float32), 0.3)
+    layer = LinearSparse.from_dense(w, fmt=fmt)
+    x = jnp.asarray(RNG.standard_normal((6, 40)).astype(np.float32))
+    y_old = spmm(layer.weight, x.T, backend="ref").T
+    np.testing.assert_allclose(np.asarray(layer(x)), np.asarray(y_old),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_from_dense_width_aware_profile(tmp_path, monkeypatch):
+    """ncols reaches the profiling tuner: a width-stated build succeeds and
+    the layer computes correctly at that width."""
+    from repro.tuning import CACHE_PATH_ENV
+    monkeypatch.setenv(CACHE_PATH_ENV, str(tmp_path / "sel.json"))
+    w = prune_magnitude(RNG.standard_normal((32, 48)).astype(np.float32), 0.2)
+    layer = LinearSparse.from_dense(w, tune="profile", ncols=16)
+    x = jnp.asarray(RNG.standard_normal((16, 32)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(layer(x)), np.asarray(x) @ w,
+                               rtol=1e-4, atol=1e-4)
