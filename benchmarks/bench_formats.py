@@ -11,14 +11,24 @@ The reference format also gets its Pallas kernel measured two ways:
 "the Pallas path is actually fastest"), and ``kernel_tuned_CSR_*`` records
 the tuner's own measurement of that winner, so the autotuner's effect is
 visible in BENCH_spmv.json next to the untuned history.
+
+A second family targets SELL-C-sigma: power-law row lengths (``*_pow{n}``
+rows), where the sigma-sorted per-slice padding beats both ELL's global
+kmax blowup and CSR's segmented reduction. The three contenders' *tuned*
+Pallas kernels are measured head-to-head (``kernel_tuned_{fmt}_pow{n}``)
+and ``format_best_pow{n}`` records what the auto route — profiling over
+(format, backend) pairs reading the tuned cache — actually selects.
 """
 import os
 import tempfile
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import DynamicMatrix, Format, autotune, convert, hpcg, spmv
+from repro.core import (DynamicMatrix, Format, autotune, convert,
+                        coo_from_arrays, hpcg, spmv)
 
 
 def _time(fn, *args, iters=10, warmup=2):
@@ -26,12 +36,32 @@ def _time(fn, *args, iters=10, warmup=2):
     return time_fn(fn, *args, iters=iters, warmup=warmup)
 
 
-FORMATS = (Format.COO, Format.CSR, Format.DIA, Format.ELL)
+FORMATS = (Format.COO, Format.CSR, Format.DIA, Format.ELL, Format.SELL)
+
+# DIA is pathological on unstructured power-law patterns (every diagonal
+# occupied — the table would dwarf the matrix), so the irregular family
+# compares the formats that can plausibly win it.
+POW_FORMATS = (Format.COO, Format.CSR, Format.ELL, Format.SELL)
 
 
-def run(sizes=((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48))):
+def powerlaw_coo(seed, n, shape_a=1.3, scale=4.0):
+    """Power-law row lengths (pareto counts): the irregular-row family."""
+    rng = np.random.default_rng(seed)
+    counts = np.minimum(1 + (rng.pareto(shape_a, n) * scale).astype(np.int64),
+                        n)
+    rows = np.repeat(np.arange(n, dtype=np.int64), counts)
+    cols = np.concatenate([rng.choice(n, k, replace=False) for k in counts])
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    vals = np.where(np.abs(vals) < 1e-3, 1e-3, vals)
+    return coo_from_arrays(rows, cols, vals, (n, n))
+
+
+def run(sizes=((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48)),
+        pow_sizes=(4096,)):
     from benchmarks.run import _cfg_str
     from repro.tuning import SelectionCache, kernel_tune
+    from repro.tuning.cache import CACHE_PATH_ENV
+    from repro.tuning.engines import profile_select
 
     rows = []
     f = jax.jit(lambda a, v: spmv(a, v))
@@ -66,6 +96,50 @@ def run(sizes=((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48))):
             tuned = autotune(dm, mode="analytic").best
             rows.append((f"format_best_n{n}", times[best] * 1e6,
                          f"measured={best.name};analytic_pick={tuned.name}"))
+
+        # ---- irregular power-law rows: the SELL-C-sigma target family ----
+        # Point the process-default kernel cache at the ephemeral store so
+        # the auto route (profile over (format, backend) pairs) reads the
+        # records tuned right here.
+        prev = os.environ.get(CACHE_PATH_ENV)
+        os.environ[CACHE_PATH_ENV] = kcache.path
+        try:
+            for n in pow_sizes:
+                A = powerlaw_coo(7, n)
+                dm = DynamicMatrix(A)
+                x = jnp.ones((n,), jnp.float32)
+                times = {fmt: _time(f, dm.activate(fmt), x)
+                         for fmt in POW_FORMATS}
+                ref = times[Format.CSR]
+                for fmt in POW_FORMATS:
+                    rows.append((f"format_{fmt.name}_pow{n}",
+                                 times[fmt] * 1e6,
+                                 f"family=powerlaw;"
+                                 f"speedup_vs_csr={ref / times[fmt]:.2f}"))
+                # tuned Pallas contenders head-to-head on the same matrix
+                for fmt in (Format.CSR, Format.ELL, Format.SELL):
+                    Af = dm.activate(fmt).concrete
+                    rec = kernel_tune.tune_kernel(Af, x, cache=kcache,
+                                                  iters=5, inner=2)
+                    rows.append((f"kernel_tuned_{fmt.name}_pow{n}",
+                                 rec.kernel_us,
+                                 f"family=powerlaw;cfg={_cfg_str(rec.cfg)};"
+                                 f"ref_us={rec.ref_us:.0f};"
+                                 f"speedup_vs_ref={rec.speedup:.2f}"))
+                # what the auto route actually selects, given those records
+                rep = profile_select(A, x, candidates=POW_FORMATS,
+                                     backends=("ref", "pallas"),
+                                     iters=3, inner=2)
+                rows.append((f"format_best_pow{n}",
+                             rep.times[rep.best] * 1e6,
+                             f"family=powerlaw;selected={rep.best.name};"
+                             f"backend={rep.backend};"
+                             f"cfg={_cfg_str(rep.cfg)}"))
+        finally:
+            if prev is None:
+                os.environ.pop(CACHE_PATH_ENV, None)
+            else:
+                os.environ[CACHE_PATH_ENV] = prev
     return rows
 
 

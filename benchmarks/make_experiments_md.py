@@ -99,6 +99,41 @@ def hpcg_table() -> str:
     return "\n".join(out)
 
 
+def powerlaw_table() -> str:
+    """Pivot BENCH_spmv.json's power-law family: contender x matrix size.
+
+    The SELL-C-sigma scoreboard: per-format SpMV, the tuned Pallas
+    head-to-head, and the ``format_best_pow*`` auto-route pick."""
+    path = os.path.join(ROOT, "BENCH_spmv.json")
+    try:
+        rows = json.load(open(path)).get("rows", [])
+    except (OSError, ValueError):
+        return "_no BENCH_spmv.json — run `python -m benchmarks.run --only formats`_"
+    cells = {}  # contender -> {n: (us, derived)}
+    for r in rows:
+        m = re.fullmatch(r"(format|kernel_tuned)_(\w+?)_pow(\d+)", r["name"])
+        if not m:
+            continue
+        label = (m.group(2) if m.group(1) == "format"
+                 else f"{m.group(2)} (Pallas, tuned)")
+        cells.setdefault(label, {})[int(m.group(3))] = (
+            r["us_per_call"], r.get("derived", ""))
+    if not cells:
+        return ("_BENCH_spmv.json holds no *_pow rows — run "
+                "`python -m benchmarks.run --only formats`_")
+    sizes = sorted({n for v in cells.values() for n in v})
+    out = ["| contender (µs) | " + " | ".join(f"n={n}" for n in sizes) + " |",
+           "|---|" + "---|" * len(sizes)]
+    for label in sorted(cells):
+        vals = []
+        for n in sizes:
+            us, derived = cells[label].get(n, (None, ""))
+            vals.append("-" if us is None else
+                        f"{us:.0f}" + (f" ({derived})" if derived else ""))
+        out.append(f"| {label} | " + " | ".join(vals) + " |")
+    return "\n".join(out)
+
+
 def obs_table() -> str:
     """Render BENCH_obs.json's overlap decomposition via repro.obs.report."""
     path = os.path.join(ROOT, "BENCH_obs.json")
@@ -149,6 +184,8 @@ def main():
     parts.append(dist_table())
     parts.append("\n### HPCG solvers: CG vs Jacobi-PCG vs MG-PCG (BENCH_hpcg.json)\n")
     parts.append(hpcg_table())
+    parts.append("\n### Power-law rows: the SELL-C-σ family (BENCH_spmv.json)\n")
+    parts.append(powerlaw_table())
     parts.append("\n### Exchange/compute overlap per shard count (BENCH_obs.json)\n")
     parts.append(obs_table())
     os.makedirs(os.path.dirname(OUT), exist_ok=True)

@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV and persists the perf trajectory:
   bench_convert    §III-B  conversion (format-switch) amortisation
   switch           —       host-sync vs device-resident switch overhead
   bench_kernels    —       Pallas kernels (interpret) vs pure-jnp reference
+  bench_select     —       selection-mode shoot-out (ml/analytic/cached/
+                           profile) over the corpus families incl. the
+                           power-law irregular-row regime SELL covers
   bench_hpcg       —       HPCG solves: CG vs Jacobi-PCG vs MG-PCG
                            (iterations-to-tol + wall-clock, uniform-CSR vs
                            per-level multiformat hierarchies)
@@ -43,7 +46,7 @@ from repro import env as _env
 
 _env.apply()
 
-SPMV_SUITES = ("overhead", "formats", "kernels")
+SPMV_SUITES = ("overhead", "formats", "kernels", "select")
 CONVERT_SUITES = ("convert", "switch")
 DIST_SUITES = ("scaling",)
 HPCG_SUITES = ("hpcg",)
@@ -96,6 +99,8 @@ def bench_kernels():
     rows = []
     with tempfile.TemporaryDirectory() as td:
         kcache = SelectionCache(os.path.join(td, "kernels.json"))
+        from benchmarks.bench_formats import powerlaw_coo
+
         x = jnp.ones((4096,), jnp.float32)
         suite = [
             ("dia_spmv", convert(banded_coo((4096, 4096), [-64, -1, 0, 1, 64]),
@@ -104,6 +109,8 @@ def bench_kernels():
                                  Format.ELL), "spmv", x),
             ("csr_spmv", convert(random_coo(2, (4096, 4096), 0.01),
                                  Format.CSR), "spmv", x),
+            ("sell_spmv", convert(powerlaw_coo(7, 4096), Format.SELL),
+             "spmv", x),
             ("bsr_spmm", convert(random_coo(1, (1024, 1024), 0.1), Format.BSR,
                                  block_size=128), "spmm",
              jnp.ones((1024, 128), jnp.float32)),
@@ -142,7 +149,7 @@ def main(argv=None):
 
     from benchmarks import (bench_convert, bench_formats, bench_hpcg,
                             bench_obs, bench_overhead, bench_scaling,
-                            bench_serve)
+                            bench_select, bench_serve)
 
     suites = {
         "overhead": lambda: bench_overhead.run(
@@ -150,12 +157,15 @@ def main(argv=None):
             ((8, 8, 8), (16, 16, 16), (24, 24, 24), (32, 32, 32))),
         "formats": lambda: bench_formats.run(
             sizes=((8, 8, 8), (16, 16, 16)) if args.quick else
-            ((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48))),
+            ((8, 8, 8), (16, 16, 16), (32, 32, 32), (48, 48, 48)),
+            pow_sizes=(1024,) if args.quick else (4096,)),
         "convert": bench_convert.run,
         "switch": lambda: bench_overhead.run_switch(
             sizes=((8, 8, 8), (16, 16, 16)) if args.quick else
             ((8, 8, 8), (16, 16, 16), (24, 24, 24))),
         "kernels": bench_kernels,
+        "select": lambda: bench_select.run(
+            samples=6, iters=4) if args.quick else bench_select.run(),
         "scaling": lambda: bench_scaling.run(
             (1, 2, 4, 8), grid=(8, 8, 16), iters=10,
             restart_shards=(4,)) if args.quick else

@@ -9,11 +9,12 @@ Public API:
 """
 from repro.core.autotune import PatternStats, TuneReport, analytic_select, autotune, profile_select
 from repro.core.convert import (SwitchPlan, convert, convert_execute,
-                                convert_execute_batch, plan_switch,
-                                plan_switch_batch, to_coo)
+                                convert_execute_batch, coo_to_sell,
+                                plan_switch, plan_switch_batch, sell_to_coo,
+                                to_coo)
 from repro.core.dynamic import DEFAULT_CANDIDATES, DynamicMatrix, SwitchDynamicMatrix
-from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
-                                banded_coo, bytes_of, coo_from_arrays,
+from repro.core.formats import (BSR, COO, CSR, DIA, ELL, SELL, Dense, Format,
+                                HYB, banded_coo, bytes_of, coo_from_arrays,
                                 coo_from_dense_np, deep_copy, dense_from_array,
                                 random_coo, shallow_copy, to_dense_np)
 from repro.core.ops import (assign, axpy, dot, extract_diagonal, norm2,
@@ -21,9 +22,9 @@ from repro.core.ops import (assign, axpy, dot, extract_diagonal, norm2,
                             waxpby)
 
 __all__ = [
-    "Format", "COO", "CSR", "DIA", "ELL", "BSR", "Dense", "HYB",
+    "Format", "COO", "CSR", "DIA", "ELL", "BSR", "Dense", "HYB", "SELL",
     "convert", "convert_execute", "convert_execute_batch", "plan_switch",
-    "plan_switch_batch", "SwitchPlan", "to_coo",
+    "plan_switch_batch", "SwitchPlan", "to_coo", "coo_to_sell", "sell_to_coo",
     "DynamicMatrix", "SwitchDynamicMatrix",
     "DEFAULT_CANDIDATES", "spmv", "spmm", "spmm_t", "dot", "waxpby", "axpy",
     "norm2",

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import (BSR, COO, CSR, DIA, ELL, Dense, Format, HYB,
-                                coo_from_arrays)
+                                SELL, coo_from_arrays)
 from repro.core.ops import csr_row_ids
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
@@ -159,6 +159,24 @@ def hyb_to_coo(A: HYB) -> COO:
                jnp.concatenate([e.data, c.data]), A.shape, A.nnz)
 
 
+def sell_to_coo(A: SELL) -> COO:
+    """SELL -> COO. jit-able: recover (slice, lane) from each flat position
+    via searchsorted on the slice pointers, then the original row through
+    the permutation. Padding/ghost entries stay inert (row 0, val 0)."""
+    m, n = A.shape
+    c = A.c
+    cap = A.capacity
+    p = jnp.arange(cap, dtype=jnp.int32)
+    s = jnp.searchsorted(A.slice_ptrs, p, side="right").astype(jnp.int32) - 1
+    s = jnp.clip(s, 0, A.nslices - 1)
+    lane = (p - A.slice_ptrs[s]) % c
+    rows = jnp.clip(A.perm[s * c + lane], 0, m - 1).astype(jnp.int32)
+    live = A.data != 0
+    rows = jnp.where(live, rows, 0)
+    cols = jnp.where(live, jnp.clip(A.cols, 0, n - 1), 0).astype(jnp.int32)
+    return COO(rows, cols, A.data, A.shape, A.nnz)
+
+
 def dense_to_coo(A: Dense, capacity: Optional[int] = None) -> COO:
     """Dense -> COO. With ``capacity`` (from a plan) the extraction is
     jit-able and sync-free via ``jnp.nonzero(size=...)`` — capacity
@@ -190,6 +208,8 @@ def to_coo(A, capacity: Optional[int] = None) -> COO:
         return bsr_to_coo(A)
     if isinstance(A, HYB):
         return hyb_to_coo(A)
+    if isinstance(A, SELL):
+        return sell_to_coo(A)
     if isinstance(A, Dense):
         return dense_to_coo(A, capacity)
     raise TypeError(f"not a sparse container: {type(A)}")
@@ -220,6 +240,13 @@ class SwitchPlan:
     bsr_indices: Optional[Tuple[int, ...]] = None     # BSR block columns
     hyb_coo_capacity: Optional[int] = None            # HYB overflow slots
     capacity: Optional[int] = None                    # Dense->COO extraction
+    sell_c: Optional[int] = None                      # SELL slice height C
+    sell_sigma: Optional[int] = None                  # SELL sort window
+    sell_slice_ptrs: Optional[Tuple[int, ...]] = None  # SELL flat slice caps
+    sell_perm: Optional[Tuple[int, ...]] = None       # SELL row permutation
+    # (sell_perm is None for batch plans: each part derives its own sigma-
+    # sort permutation on device in the numeric phase; the slice caps are
+    # the elementwise max over parts and stay shared/static.)
 
     def __post_init__(self):
         object.__setattr__(self, "target", Format(self.target))
@@ -263,10 +290,49 @@ def _unique_small(values, sentinel=_SENTINEL) -> np.ndarray:
     return u[u != sentinel]
 
 
+def _sell_geometry(c: Optional[int], sigma: Optional[int], m: int):
+    """Normalize (C, sigma) hints: C defaults to 32 lanes, sigma to 8*C
+    (and is never smaller than C — a sub-slice sort window is meaningless)."""
+    C = 32 if c is None else max(1, int(c))
+    s = 8 * C if sigma is None else int(sigma)
+    s = max(C, s)
+    nslices = max(1, -(-m // C))
+    return C, s, nslices
+
+
+def _sell_perm(counts, sigma: int, m: int) -> jax.Array:
+    """sigma-window sort permutation, on device: rows ordered by window,
+    then by descending live-entry count (stable — ties keep matrix order).
+    ``perm[p]`` is the original row stored at sorted position ``p``."""
+    wid = jnp.arange(m, dtype=jnp.int32) // sigma
+    return jnp.lexsort((-counts.astype(jnp.int32), wid)).astype(jnp.int32)
+
+
+def _sell_widths(counts, perm, c: int, nslices: int) -> jax.Array:
+    """Per-slice max live-row-count after the sigma-sort, on device."""
+    mp = nslices * c
+    m = counts.shape[0]
+    sc = jnp.zeros((mp,), jnp.int32).at[:m].set(counts[perm].astype(jnp.int32))
+    sids = jnp.arange(mp, dtype=jnp.int32) // c
+    return jax.ops.segment_max(sc, sids, num_segments=nslices)
+
+
+def _sell_ptrs(widths_np: np.ndarray, c: int) -> Tuple[int, ...]:
+    """Static flat slice pointers from pulled per-slice widths. An all-empty
+    matrix keeps one padding plane so the flat arrays are never zero-size."""
+    widths_np = np.asarray(widths_np, np.int64).copy()
+    if widths_np.sum() == 0:
+        widths_np[0] = 1
+    ptrs = np.concatenate([np.zeros(1, np.int64), np.cumsum(widths_np * c)])
+    return tuple(int(x) for x in ptrs)
+
+
 def plan_switch(A, fmt: Format, *, k: Optional[int] = None,
                 offsets: Optional[Sequence[int]] = None,
                 block_size: int = 128,
                 capacity: Optional[int] = None,
+                c: Optional[int] = None,
+                sigma: Optional[int] = None,
                 check: bool = True) -> SwitchPlan:
     """Symbolic phase: compute the :class:`SwitchPlan` for ``A`` -> ``fmt``.
 
@@ -297,14 +363,30 @@ def plan_switch(A, fmt: Format, *, k: Optional[int] = None,
         if k is None:
             k = max(1, int(_planned_pull(jnp.max(_live_row_counts(C, live)))))
         elif check and not _is_tracer(C.data):
-            kmax = int(_planned_pull(jnp.max(_live_row_counts(C, live))))
+            counts = _live_row_counts(C, live)
+            probe = _planned_pull(jnp.stack([jnp.max(counts),
+                                             jnp.argmax(counts).astype(jnp.int32)]))
+            kmax, bad_row = int(probe[0]), int(probe[1])
             if kmax > int(k):
                 raise ValueError(
-                    f"coo_to_ell: k={int(k)} but a row holds {kmax} live "
-                    f"entries; the overflow would be silently dropped. Pass "
-                    f"k>={kmax}, or use Format.HYB which spills overflow "
-                    f"into its COO part.")
+                    f"coo_to_ell: k={int(k)} but row {bad_row} holds {kmax} "
+                    f"live entries; the overflow would be silently dropped. "
+                    f"Pass k>={kmax}, or use Format.HYB which spills "
+                    f"overflow into its COO part.")
         return SwitchPlan(fmt, ell_k=int(k), capacity=capacity)
+
+    if fmt == Format.SELL:
+        C_, sig, nslices = _sell_geometry(c, sigma, m)
+        counts = _live_row_counts(C, live)
+        perm = _sell_perm(counts, sig, m)
+        widths = _sell_widths(counts, perm, C_, nslices)
+        # one planned pull for the whole geometry: widths then permutation
+        probe = _planned_pull(jnp.concatenate([widths, perm]))
+        ptrs = _sell_ptrs(probe[:nslices], C_)
+        return SwitchPlan(fmt, sell_c=C_, sell_sigma=sig,
+                          sell_slice_ptrs=ptrs,
+                          sell_perm=tuple(int(x) for x in probe[nslices:]),
+                          capacity=capacity)
 
     if fmt == Format.DIA:
         if offsets is None:
@@ -385,6 +467,8 @@ def plan_switch_batch(A: COO, fmt: Format, *, k: Optional[int] = None,
                       offsets: Optional[Sequence[int]] = None,
                       block_size: int = 128,
                       capacity: Optional[int] = None,
+                      c: Optional[int] = None,
+                      sigma: Optional[int] = None,
                       check: bool = True) -> SwitchPlan:
     """Shared symbolic phase over a *stacked* batch of same-shape COO parts.
 
@@ -413,14 +497,34 @@ def plan_switch_batch(A: COO, fmt: Format, *, k: Optional[int] = None,
         if k is None:
             k = max(1, int(_planned_pull(jnp.max(_batch_row_counts(A)))))
         elif check and not _is_tracer(A.data):
-            kmax = int(_planned_pull(jnp.max(_batch_row_counts(A))))
+            counts = _batch_row_counts(A)
+            probe = _planned_pull(jnp.stack([jnp.max(counts),
+                                             jnp.argmax(counts).astype(jnp.int32)]))
+            kmax, flat = int(probe[0]), int(probe[1])
+            part, bad_row = divmod(flat, m)
             if kmax > int(k):
                 raise ValueError(
-                    f"plan_switch_batch: k={int(k)} but a row holds {kmax} "
-                    f"live entries; the overflow would be silently dropped. "
-                    f"Pass k>={kmax}, or use Format.HYB which spills "
-                    f"overflow into its COO part.")
+                    f"plan_switch_batch: k={int(k)} but row {bad_row} of "
+                    f"part {part} holds {kmax} live entries; the overflow "
+                    f"would be silently dropped. Pass k>={kmax}, or use "
+                    f"Format.HYB which spills overflow into its COO part.")
         return SwitchPlan(fmt, ell_k=int(k), capacity=capacity)
+
+    if fmt == Format.SELL:
+        C_, sig, nslices = _sell_geometry(c, sigma, m)
+        counts = _batch_row_counts(A)  # (P, M)
+
+        def one(cnt):
+            return _sell_widths(cnt, _sell_perm(cnt, sig, m), C_, nslices)
+
+        # shared static slice caps = elementwise max over parts: a part's
+        # i-th-largest count inside any sigma window is <= the max over
+        # parts, so every part's own sigma-sort fits under the shared caps.
+        widths = jnp.max(jax.vmap(one)(counts), axis=0)
+        ptrs = _sell_ptrs(_planned_pull(widths), C_)
+        return SwitchPlan(fmt, sell_c=C_, sell_sigma=sig,
+                          sell_slice_ptrs=ptrs, sell_perm=None,
+                          capacity=capacity)
 
     if fmt == Format.DIA:
         if offsets is None:
@@ -630,6 +734,59 @@ def coo_to_hyb(A: COO, k: Optional[int] = None) -> HYB:
     return _coo_to_hyb_exec(A, plan.ell_k, plan.hyb_coo_capacity)
 
 
+def _coo_to_sell_exec(A: COO, plan: SwitchPlan) -> SELL:
+    """SELL numeric phase: jit-able scatter into the flat column-major
+    slice storage. When the plan carries ``sell_perm`` (single-matrix
+    plans) the permutation lowers to an on-device constant; batch plans
+    ship ``sell_perm=None`` and each part re-derives its own sigma-sort on
+    device — sort/segment/scatter all ``vmap`` cleanly and the shared
+    static slice caps are guaranteed to fit every part.
+    """
+    m, n = A.shape
+    cs = int(plan.sell_c)
+    ptrs_np = np.asarray(plan.sell_slice_ptrs, np.int32)
+    nslices = len(ptrs_np) - 1
+    cap = int(ptrs_np[-1])
+    mp = nslices * cs
+    rows, cols, data, slot, live = _row_slots(A)
+    if plan.sell_perm is not None:
+        perm = jnp.asarray(np.asarray(plan.sell_perm, np.int32))
+    else:
+        counts = jax.ops.segment_sum((A.data != 0).astype(jnp.int32), A.row,
+                                     num_segments=m)
+        perm = _sell_perm(counts, int(plan.sell_sigma), m)
+    # sorted position of each original row; ghost lanes past M map to row M
+    inv = jnp.zeros((m,), jnp.int32).at[perm].set(
+        jnp.arange(m, dtype=jnp.int32))
+    perm_p = jnp.concatenate(
+        [perm, jnp.full((mp - m,), m, jnp.int32)]) if mp > m else perm
+    ptrs = jnp.asarray(ptrs_np)
+    p = inv[rows]
+    sl = p // cs
+    lane = p % cs
+    width = (ptrs[sl + 1] - ptrs[sl]) // cs
+    # a live entry whose within-row rank exceeds its slice cap can only
+    # mean a stale plan; park it in the dropped guard slot at ``cap``.
+    ok = live & (slot < width)
+    pos = jnp.where(ok, ptrs[sl] + slot * cs + lane, cap)
+    # padding sentinel col=-1 (as in ELL): gathers clip to 0 with data=0
+    # inert, and -1 never collides with a real diagonal position.
+    cols_flat = jnp.full((cap + 1,), -1, jnp.int32).at[pos].set(
+        jnp.where(ok, cols, -1))[:cap]
+    data_flat = jnp.zeros((cap + 1,), A.dtype).at[pos].add(
+        jnp.where(ok, data, 0))[:cap]
+    return SELL(cols_flat, data_flat, perm_p, ptrs, A.shape, A.nnz,
+                cs, int(plan.sell_sigma))
+
+
+def coo_to_sell(A: COO, c: Optional[int] = None,
+                sigma: Optional[int] = None) -> SELL:
+    """COO -> SELL-C-sigma. Symbolic: sigma-window sort permutation and
+    per-slice caps (planned); numeric: jit-able flat scatter."""
+    plan = plan_switch(A, Format.SELL, c=c, sigma=sigma)
+    return _coo_to_sell_exec(A, plan)
+
+
 def coo_to_dense(A: COO) -> Dense:
     """COO -> Dense. jit-able scatter-add."""
     m, n = A.shape
@@ -657,6 +814,8 @@ def convert_execute(A, plan: SwitchPlan):
         return _coo_to_bsr_exec(C, plan)
     if fmt == Format.HYB:
         return _coo_to_hyb_exec(C, plan.ell_k, plan.hyb_coo_capacity)
+    if fmt == Format.SELL:
+        return _coo_to_sell_exec(C, plan)
     if fmt == Format.DENSE:
         return coo_to_dense(C)
     raise ValueError(f"unknown format {fmt}")
@@ -709,7 +868,15 @@ def _observe_plan_waste(A, plan: SwitchPlan) -> None:
         nnz = int(A.nnz)
     except (TypeError, AttributeError):  # duck-typed inputs without nnz
         return
-    if m <= 0 or plan.ell_k is None:
+    if m <= 0:
+        return
+    if Format(plan.target) == Format.SELL and plan.sell_slice_ptrs:
+        slots = int(plan.sell_slice_ptrs[-1])
+        if slots > 0:
+            _metrics.observe("sell.padding_waste",
+                             min(1.0, max(0.0, 1.0 - nnz / slots)))
+        return
+    if plan.ell_k is None:
         return
     slots = m * int(plan.ell_k)
     if slots <= 0:

@@ -774,7 +774,7 @@ def build_dist_matrix(row, col, val, shape, mesh: Mesh, axis: AxisNames,
                       local_format: Format = Format.CSR,
                       remote_format: Format = Format.CSR,
                       mode: str = "uniform",
-                      candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
+                      candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL, Format.SELL),
                       tune: str = "calibrated",
                       halo_mode: str = "auto",
                       dtype=jnp.float32,

@@ -40,6 +40,7 @@ class Format(enum.IntEnum):
     BSR = 4
     DENSE = 5
     HYB = 6
+    SELL = 7
 
 
 def _register(cls):
@@ -221,7 +222,52 @@ class HYB:
         return self.ell.k
 
 
-SparseMatrix = (COO, CSR, DIA, ELL, BSR, Dense, HYB)
+@_register
+@dataclasses.dataclass(frozen=True)
+class SELL:
+    """SELL-C-sigma: sliced ELLPACK with sigma-window row sorting
+    (Kreutzer et al., arXiv:1307.6209).
+
+    Rows are sorted by descending length within sigma-row windows, then
+    grouped into slices of C consecutive sorted rows; each slice is padded
+    only to its *own* max width — the fix for ELL's global-kmax padding
+    blowup on irregular (e.g. power-law) row lengths.
+
+    Storage is flat and column-major within a slice: the entry at lane
+    ``r`` (0 <= r < C) and plane ``j`` of slice ``s`` lives at
+    ``slice_ptrs[s] + j*C + r``, so every plane is C contiguous lanes —
+    SpMV is a dense gather+FMA over contiguous vectors per plane, with one
+    output element per lane and no segmented reduction. ``perm[p]`` is the
+    original row index stored at sorted position ``p``; ghost lanes past M
+    map to row index M (dropped by the out-of-bounds scatter), and padding
+    entries carry col=0/val=0 (inert under accumulate).
+    """
+
+    cols: jax.Array  # (capacity,) int32, column-major within each slice
+    data: jax.Array  # (capacity,) values
+    perm: jax.Array  # (nslices*C,) int32 original row at sorted position
+    slice_ptrs: jax.Array  # (nslices+1,) int32 flat offset of each slice
+    shape: Tuple[int, int] = static_field()
+    nnz: int = static_field()
+    c: int = static_field()  # slice height C
+    sigma: int = static_field()  # sort-window height (multiple of C)
+
+    format = Format.SELL
+
+    @property
+    def nslices(self) -> int:
+        return int(self.slice_ptrs.shape[-1]) - 1
+
+    @property
+    def capacity(self) -> int:
+        return int(self.data.shape[-1])
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+
+SparseMatrix = (COO, CSR, DIA, ELL, BSR, Dense, HYB, SELL)
 
 FORMAT_TO_CLS = {
     Format.COO: COO,
@@ -231,6 +277,7 @@ FORMAT_TO_CLS = {
     Format.BSR: BSR,
     Format.DENSE: Dense,
     Format.HYB: HYB,
+    Format.SELL: SELL,
 }
 
 
@@ -336,8 +383,18 @@ def to_dense_np(A) -> np.ndarray:
             for p in range(indptr[bi], indptr[bi + 1]):
                 bj = idx[p]
                 out[bi * bs:(bi + 1) * bs, bj * bs:(bj + 1) * bs] += v[p]
-    elif isinstance(A, HYB):
-        out = to_dense_np(A.ell) + to_dense_np(A.coo)
+    elif isinstance(A, SELL):
+        cols, v = np.asarray(A.cols), np.asarray(A.data)
+        perm, ptrs = np.asarray(A.perm), np.asarray(A.slice_ptrs)
+        C = A.c
+        for s in range(ptrs.shape[0] - 1):
+            w = (int(ptrs[s + 1]) - int(ptrs[s])) // C
+            for r in range(C):
+                i = int(perm[s * C + r])
+                if i >= m:
+                    continue  # ghost lane past the last row
+                sl = int(ptrs[s]) + r + C * np.arange(w)
+                np.add.at(out[i], np.clip(cols[sl], 0, n - 1), v[sl])
     elif isinstance(A, Dense):
         out = np.asarray(A.data).copy()
     else:

@@ -18,7 +18,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BSR, COO, CSR, DIA, ELL, Dense, HYB
+from repro.core.formats import BSR, COO, CSR, DIA, ELL, Dense, HYB, SELL
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
 
@@ -162,8 +162,52 @@ def _spmv_hyb(A: HYB, x):
     return _spmv_ell(A.ell, x) + _spmv_coo(A.coo, x)
 
 
+def sell_sorted_ids(slice_ptrs, c: int, capacity: int, nslices: int):
+    """Per-entry *sorted row position* of a flat SELL layout (jit-able).
+
+    The SELL analogue of :func:`csr_row_ids`: recover each stored entry's
+    (slice, lane) from the slice-pointer array in one vectorised
+    searchsorted — column-major within a slice means position ``q`` of
+    slice ``s`` sits on lane ``(q - slice_ptrs[s]) % C``. Used by the
+    diagonal update/extract paths; the reference SpMV/SpMM reduce over
+    whole planes instead (:func:`_sell_plane_ids` — one searchsorted per
+    *plane*, not per entry).
+    """
+    q = jnp.arange(capacity, dtype=jnp.int32)
+    s = jnp.searchsorted(slice_ptrs, q, side="right").astype(jnp.int32) - 1
+    s = jnp.clip(s, 0, nslices - 1)
+    lane = (q - slice_ptrs[s]) % c
+    return s * c + lane
+
+
+def _sell_plane_ids(A: SELL):
+    """Slice id of each width *plane* (capacity is always a multiple of C,
+    so the flat arrays are exactly ``capacity // C`` planes of C lanes)."""
+    t = A.capacity // A.c
+    sid = jnp.searchsorted(A.slice_ptrs,
+                           jnp.arange(t, dtype=jnp.int32) * A.c,
+                           side="right").astype(jnp.int32) - 1
+    return jnp.clip(sid, 0, A.nslices - 1)
+
+
+def _spmv_sell(A: SELL, x):
+    # plane-wise: one (planes, C) gather + a segment reduction over planes
+    # grouped by slice — far cheaper than per-entry segment ids over the
+    # padded capacity.
+    m = A.shape[0]
+    c = A.c
+    t = A.capacity // c
+    contrib = A.data.reshape(t, c) * jnp.take(x, A.cols.reshape(t, c),
+                                              mode="clip")
+    y_sorted = jax.ops.segment_sum(contrib, _sell_plane_ids(A),
+                                   num_segments=A.nslices).reshape(-1)
+    # ghost lanes carry perm == m and are dropped by the OOB scatter
+    return jnp.zeros((m,), y_sorted.dtype).at[A.perm].add(y_sorted)
+
+
 _SPMV = {COO: _spmv_coo, CSR: _spmv_csr, DIA: _spmv_dia, ELL: _spmv_ell,
-         BSR: _spmv_bsr, Dense: _spmv_dense, HYB: _spmv_hyb}
+         BSR: _spmv_bsr, Dense: _spmv_dense, HYB: _spmv_hyb,
+         SELL: _spmv_sell}
 
 
 def spmv(A, x, backend: str = "ref", cfg=None):
@@ -240,8 +284,22 @@ def _spmm_hyb(A: HYB, B):
     return _spmm_ell(A.ell, B) + _spmm_coo(A.coo, B)
 
 
+def _spmm_sell(A: SELL, B):
+    m = A.shape[0]
+    kb = B.shape[1]
+    c = A.c
+    t = A.capacity // c
+    bv = jnp.take(B, A.cols.reshape(t, c), axis=0, mode="clip")  # (t, c, Kb)
+    contrib = A.data.reshape(t, c)[..., None] * bv
+    y_sorted = jax.ops.segment_sum(contrib, _sell_plane_ids(A),
+                                   num_segments=A.nslices)
+    y_sorted = y_sorted.reshape(A.nslices * c, kb)
+    return jnp.zeros((m, kb), y_sorted.dtype).at[A.perm].add(y_sorted)
+
+
 _SPMM = {COO: _spmm_coo, CSR: _spmm_csr, DIA: _spmm_dia, ELL: _spmm_ell,
-         BSR: _spmm_bsr, Dense: _spmm_dense, HYB: _spmm_hyb}
+         BSR: _spmm_bsr, Dense: _spmm_dense, HYB: _spmm_hyb,
+         SELL: _spmm_sell}
 
 
 def spmm(A, B, backend: str = "ref", cfg=None):
@@ -313,6 +371,9 @@ def extract_diagonal(A):
     if isinstance(A, BSR):
         from repro.core.convert import bsr_to_coo
         return extract_diagonal(bsr_to_coo(A))
+    if isinstance(A, SELL):
+        from repro.core.convert import sell_to_coo
+        return extract_diagonal(sell_to_coo(A))
     if isinstance(A, Dense):
         return jnp.diagonal(A.data)[:d]
     raise TypeError(type(A))
@@ -336,6 +397,14 @@ def update_diagonal(A, new_diag):
         on = A.cols == i
         vals = jnp.take(new_diag, jnp.clip(i[:, 0], 0, new_diag.shape[0] - 1), mode="clip")[:, None]
         return ELL(A.cols, jnp.where(on, vals, A.data), A.shape, A.nnz)
+    if isinstance(A, SELL):
+        p = sell_sorted_ids(A.slice_ptrs, A.c, A.capacity, A.nslices)
+        rows = jnp.take(A.perm, p, mode="clip")
+        on = A.cols == rows  # padding col=-1 never matches a row id
+        vals = jnp.take(new_diag,
+                        jnp.clip(rows, 0, new_diag.shape[0] - 1), mode="clip")
+        return SELL(A.cols, jnp.where(on, vals, A.data), A.perm,
+                    A.slice_ptrs, A.shape, A.nnz, A.c, A.sigma)
     if isinstance(A, Dense):
         d = min(A.shape)
         i = jnp.arange(d)

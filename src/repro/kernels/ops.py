@@ -30,12 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BSR, CSR, DIA, ELL, HYB
+from repro.core.formats import BSR, CSR, DIA, ELL, HYB, SELL
 from repro.kernels import bsr_spmm as _bsr
 from repro.kernels import csr_spmm as _csr_mm
 from repro.kernels import csr_spmv as _csr
 from repro.kernels import dia_spmv as _dia
 from repro.kernels import ell_spmv as _ell
+from repro.kernels import sell_spmv as _sell
 
 
 def _env_interpret():
@@ -173,6 +174,16 @@ def default_config(A, op: str = "spmv", ncols: Optional[int] = None) -> dict:
         if interpret_mode():
             return {"tm": _pow2_clamp(m, 8, 8192), "layout": "row"}
         return {"tm": 256, "layout": "col"}
+    if isinstance(A, SELL):
+        # ts slices per program; aim for ~512 sorted rows per grid step
+        # (interpret mode pays per step; each unrolled slice adds trace
+        # size, so ts stays bounded). c/sigma are *container* parameters —
+        # kernel_tune rebuilds the matrix to explore them; the wrapper
+        # only picks the launch geometry.
+        ts = _pow2_clamp(512 // max(1, A.c), 1, 64)
+        if spmm:
+            return {"ts": ts, "tn": _rhs_tile(ncols)}
+        return {"ts": ts}
     if isinstance(A, DIA):
         return {"tm": _pow2_clamp(min(m, 512), 8, 2048)}
     if isinstance(A, BSR):
@@ -214,6 +225,22 @@ def ell_spmv(A: ELL, x: jax.Array, tm: Optional[int] = None,
         return core_ops._spmv_ell(A, x)
     return _ell.ell_spmv(A.cols, A.data, x, tm=tm, layout=layout,
                          interpret=interpret_mode())
+
+
+def sell_spmv(A: SELL, x: jax.Array, ts: Optional[int] = None,
+              cfg: Optional[dict] = None) -> jax.Array:
+    """SELL-C-sigma SpMV via the slice-tiled Pallas kernel. ``cfg`` may
+    carry ``c``/``sigma`` from a tuned record — those describe the
+    container the tuner rebuilt, not a launch knob, and are ignored
+    here; only ``ts`` (slices per program) shapes the launch."""
+    cfg = resolve_config(A, cfg)
+    ts = int(_pick(ts, cfg, "ts", A))
+    if (2 * A.capacity + x.size) * 4 > X_VMEM_BUDGET:
+        from repro.core import ops as core_ops
+        return core_ops._spmv_sell(A, x)
+    return _sell.sell_spmv(A.slice_ptrs, A.cols, A.data, A.perm, x,
+                           m=A.shape[0], c=A.c, ts=ts,
+                           interpret=interpret_mode())
 
 
 def csr_spmv(A: CSR, x: jax.Array, tm: Optional[int] = None,
@@ -414,6 +441,37 @@ def hyb_spmm_t(A: HYB, X: jax.Array, cfg: Optional[dict] = None) -> jax.Array:
     return y + tail
 
 
+def _sell_spmm_cfg(A, cfg, op, ncols, ts=None, tn=None):
+    cfg = resolve_config(A, cfg, op=op, ncols=ncols)
+    ts = int(_pick(ts, cfg, "ts", A, op=op, ncols=ncols))
+    tn = int(_pick(tn, cfg, "tn", A, op=op, ncols=ncols))
+    return ts, tn
+
+
+def sell_spmm(A: SELL, B: jax.Array, ts: Optional[int] = None,
+              tn: Optional[int] = None,
+              cfg: Optional[dict] = None) -> jax.Array:
+    from repro.core import ops as core_ops
+    ts, tn = _sell_spmm_cfg(A, cfg, "spmm", B.shape[1], ts=ts, tn=tn)
+    if (2 * A.capacity + (A.shape[1] + ts * A.c) * tn) * 4 > X_VMEM_BUDGET:
+        return core_ops._spmm_sell(A, B)
+    return _sell.sell_spmm(A.slice_ptrs, A.cols, A.data, A.perm, B,
+                           m=A.shape[0], c=A.c, ts=ts, tn=tn,
+                           interpret=interpret_mode())
+
+
+def sell_spmm_t(A: SELL, X: jax.Array, ts: Optional[int] = None,
+                tn: Optional[int] = None,
+                cfg: Optional[dict] = None) -> jax.Array:
+    from repro.core import ops as core_ops
+    ts, tn = _sell_spmm_cfg(A, cfg, "spmm_t", X.shape[0], ts=ts, tn=tn)
+    if (2 * A.capacity + (A.shape[1] + ts * A.c) * tn) * 4 > X_VMEM_BUDGET:
+        return core_ops._spmm_sell(A, X.T).T
+    return _sell.sell_spmm_t(A.slice_ptrs, A.cols, A.data, A.perm, X,
+                             m=A.shape[0], c=A.c, ts=ts, tn=tn,
+                             interpret=interpret_mode())
+
+
 def bsr_spmm_t(A: BSR, X: jax.Array, tn: Optional[int] = None,
                cfg: Optional[dict] = None) -> jax.Array:
     """BSR has no native transposed-rhs kernel yet: run the (N, K) kernel
@@ -424,7 +482,8 @@ def bsr_spmm_t(A: BSR, X: jax.Array, tn: Optional[int] = None,
 
 # Registries consumed by repro.core.ops.spmv/spmm(backend="pallas").
 SPMV_PALLAS = {DIA: dia_spmv, ELL: ell_spmv, BSR: bsr_spmv, CSR: csr_spmv,
-               HYB: hyb_spmv}
-SPMM_PALLAS = {BSR: bsr_spmm, CSR: csr_spmm, ELL: ell_spmm, HYB: hyb_spmm}
+               HYB: hyb_spmv, SELL: sell_spmv}
+SPMM_PALLAS = {BSR: bsr_spmm, CSR: csr_spmm, ELL: ell_spmm, HYB: hyb_spmm,
+               SELL: sell_spmm}
 SPMM_T_PALLAS = {CSR: csr_spmm_t, ELL: ell_spmm_t, HYB: hyb_spmm_t,
-                 BSR: bsr_spmm_t}
+                 BSR: bsr_spmm_t, SELL: sell_spmm_t}

@@ -25,7 +25,7 @@ from repro.tuning.policy import FormatPolicy
 
 # Weight matrices are ragged post-pruning; DIA is never competitive there,
 # while HYB handles the long-tail rows a magnitude prune leaves behind.
-WEIGHT_CANDIDATES = (Format.CSR, Format.ELL, Format.HYB, Format.COO)
+WEIGHT_CANDIDATES = (Format.CSR, Format.ELL, Format.HYB, Format.SELL, Format.COO)
 
 
 def prune_magnitude(w: np.ndarray, density: float) -> np.ndarray:

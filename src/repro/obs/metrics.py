@@ -23,6 +23,8 @@ Standard histogram names (``observe``):
 
     ell.padding_waste        1 - nnz/(m*k) of each planned ELL layout
     hyb.padding_waste        same for the ELL part of each HYB plan
+    sell.padding_waste       1 - nnz/capacity of each planned SELL-C-σ
+                             slicing (per-slice widths, post σ-sort)
 
 ``snapshot()`` returns a plain dict (JSON-ready); ``scope()`` gives tests
 an order-independent view: deltas against the values at scope entry, so

@@ -31,7 +31,7 @@ from repro.tuning.tree import (DEFAULT_TREE_PATH, DecisionTree,
 
 FAMILIES = ("stencil27", "stencil7", "banded", "random", "powerlaw", "block")
 
-DEFAULT_CANDIDATES = (Format.COO, Format.CSR, Format.DIA, Format.ELL)
+DEFAULT_CANDIDATES = (Format.COO, Format.CSR, Format.DIA, Format.ELL, Format.SELL)
 
 
 def make_matrix(family: str, rng: np.random.Generator) -> COO:

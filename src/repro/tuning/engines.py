@@ -95,6 +95,17 @@ def predicted_bytes(stats: PatternStats, fmt: Format,
     elif fmt == Format.ELL:
         mat = stats.max_row_nnz * m * (ii + w)
         x = stats.max_row_nnz * m * w * GATHER
+    elif fmt == Format.SELL:
+        # sigma-window sorting pads each C-row slice only to its own width:
+        # slack grows with row-length dispersion but is bounded well below
+        # ELL's global-kmax blowup. Model slots as nnz inflated by a cv-
+        # scaled factor, clamped to the ELL ceiling; the permutation adds
+        # one index read per row (scatter back to matrix order).
+        cv = float(getattr(stats, "row_cv", 0.0))
+        slots = min(float(stats.max_row_nnz * m),
+                    stats.nnz * (1.0 + 0.35 * min(cv, 4.0)) + m)
+        mat = slots * (ii + w) + m * ii
+        x = slots * w * GATHER
     elif fmt == Format.BSR:
         bs = 128
         blocks = max(1, int(np.ceil(stats.nnz / (bs * bs))))  # lower bound
@@ -116,7 +127,7 @@ def predicted_bytes(stats: PatternStats, fmt: Format,
 
 
 def analytic_select(stats: PatternStats,
-                    candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
+                    candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL, Format.SELL),
                     hbm_bw: float = HBM_BW,
                     calibrate: bool = False) -> TuneReport:
     pen = calibrate_gather_penalty() if calibrate else None
@@ -149,7 +160,7 @@ def time_fn(fn, *args, iters: int = 10, warmup: int = 2,
 
 
 def profile_select(A, x,
-                   candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL),
+                   candidates: Sequence[Format] = (Format.COO, Format.CSR, Format.DIA, Format.ELL, Format.SELL),
                    iters: int = 10, backend: str = "ref",
                    conv_kwargs: Optional[dict] = None,
                    inner: int = 4,

@@ -61,6 +61,7 @@ class PatternStats:
     max_row_nnz: int
     ndiag: int
     itemsize: int = 4
+    row_cv: float = 0.0  # std / mean row length (drives the SELL byte model)
 
     @classmethod
     def from_coo(cls, A: COO) -> "PatternStats":
@@ -70,10 +71,12 @@ class PatternStats:
         live = d != 0
         r, c = r[live], c[live]
         nnz = int(live.sum())
-        max_row = int(np.bincount(r, minlength=A.shape[0]).max()) if nnz else 1
+        counts = np.bincount(r, minlength=A.shape[0]) if nnz else np.zeros(1)
+        max_row = int(counts.max()) if nnz else 1
+        cv = float(counts.std() / max(counts.mean(), 1e-12)) if nnz else 0.0
         ndiag = int(np.unique(c.astype(np.int64) - r.astype(np.int64)).size) if nnz else 1
         return cls(A.shape[0], A.shape[1], nnz, max(1, max_row), max(1, ndiag),
-                   np.dtype(A.dtype).itemsize)
+                   np.dtype(A.dtype).itemsize, cv)
 
 
 @dataclasses.dataclass
@@ -153,7 +156,8 @@ class PatternFeatures:
         """Project down to the analytic model's statistics."""
         return PatternStats(self.m, self.n, max(self.nnz, 1),
                             max(1, self.row_nnz_max), max(1, self.ndiag),
-                            self.itemsize)
+                            self.itemsize,
+                            self.row_nnz_std / max(self.row_nnz_mean, 1e-12))
 
 
 # ---------------------------------------------------------------------------

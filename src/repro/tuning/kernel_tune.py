@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BSR, CSR, DIA, ELL, HYB, Format
+from repro.core.formats import BSR, CSR, DIA, ELL, HYB, SELL, Format
 from repro.tuning.cache import SelectionCache, default_cache_path
 from repro.tuning.engines import time_fn
 
@@ -261,6 +261,22 @@ def default_grid(A, smoke: bool = False, op: str = "spmv",
             tms = sorted({256, 1024, _pow2ceil(m, 128, 8192)})
             grid = [base] + [{"tm": tm, "layout": lay}
                              for tm in tms for lay in ("row", "col")]
+    elif isinstance(A, SELL):
+        # (c, sigma) reshape the *container* (slice height / sort window) —
+        # tune_kernel rebuilds the matrix per cfg; ts is launch geometry.
+        # Every cfg carries explicit (c, sigma) so the persisted record
+        # names the container geometry its timing was measured on.
+        own = {"c": A.c, "sigma": A.sigma}
+        base = dict(own, **base)
+        if smoke:
+            alt_c = 64 if A.c != 64 else 32
+            grid = [base, {"c": alt_c, "sigma": 8 * alt_c, "ts": 2}]
+        else:
+            grid = [base] + [{"c": c, "sigma": 8 * c, "ts": ts}
+                             for c in (32, 64, 256) for ts in (1, 2, 8)]
+        if spmm:
+            tn0 = kops._rhs_tile(ncols)
+            grid = [dict(g, tn=g.get("tn", tn0)) for g in grid]
     elif isinstance(A, DIA):
         grid = [base] + ([{"tm": 128}] if smoke else
                          [{"tm": tm} for tm in (256, 512, 1024)])
@@ -290,6 +306,19 @@ def default_grid(A, smoke: bool = False, op: str = "spmv",
 # ---------------------------------------------------------------------------
 
 
+def _cfg_operand(A, cfg: dict):
+    """The container a cfg must be timed on. For SELL, ``c``/``sigma`` are
+    container-geometry knobs, not kernel kwargs: a cfg that changes them is
+    timed on a rebuilt matrix (same pattern, different slicing)."""
+    if isinstance(A, SELL) and cfg:
+        c = int(cfg.get("c", A.c))
+        sigma = int(cfg.get("sigma", A.sigma))
+        if (c, sigma) != (A.c, A.sigma):
+            from repro.core.convert import coo_to_sell, sell_to_coo
+            return coo_to_sell(sell_to_coo(A), c=c, sigma=sigma)
+    return A
+
+
 def tune_kernel(A, x=None, *, op: str = "spmv",
                 cache: Optional[SelectionCache] = None,
                 grid: Optional[Sequence[dict]] = None,
@@ -315,21 +344,24 @@ def tune_kernel(A, x=None, *, op: str = "spmv",
             x = jnp.ones((A.shape[1],), A.dtype)
         ref_fn = jax.jit(lambda v: _ops.spmv(A, v, backend="ref"))
         run = lambda cfg: jax.jit(
-            lambda v: _ops.spmv(A, v, backend="pallas", cfg=cfg))
+            lambda v, a=_cfg_operand(A, cfg): _ops.spmv(
+                a, v, backend="pallas", cfg=cfg))
     elif op == "spmm":
         if x is None:
             x = jnp.ones((A.shape[1], B_cols), A.dtype)
         ncols = x.shape[1]
         ref_fn = jax.jit(lambda b: _ops.spmm(A, b, backend="ref"))
         run = lambda cfg: jax.jit(
-            lambda b: _ops.spmm(A, b, backend="pallas", cfg=cfg))
+            lambda b, a=_cfg_operand(A, cfg): _ops.spmm(
+                a, b, backend="pallas", cfg=cfg))
     elif op == "spmm_t":
         if x is None:
             x = jnp.ones((B_cols, A.shape[1]), A.dtype)
         ncols = x.shape[0]
         ref_fn = jax.jit(lambda b: _ops.spmm_t(A, b, backend="ref"))
         run = lambda cfg: jax.jit(
-            lambda b: _ops.spmm_t(A, b, backend="pallas", cfg=cfg))
+            lambda b, a=_cfg_operand(A, cfg): _ops.spmm_t(
+                a, b, backend="pallas", cfg=cfg))
     else:
         raise ValueError(f"op {op!r} not in ('spmv', 'spmm', 'spmm_t')")
 
@@ -357,8 +389,9 @@ def tune_kernel(A, x=None, *, op: str = "spmv",
 
 def _suite(smoke: bool):
     """Representative matrices to warm the cache with (HPCG stencil +
-    irregular random, CSR/ELL/DIA)."""
+    irregular random, CSR/ELL/DIA, plus a power-law-rows SELL target)."""
     from repro.core import convert, hpcg, random_coo
+    from repro.tuning.corpus import make_matrix
 
     sizes = ((8, 8, 8),) if smoke else ((8, 8, 8), (16, 16, 16))
     mats = []
@@ -371,6 +404,12 @@ def _suite(smoke: bool):
     rnd = random_coo(0, (n, n), density=0.02)
     for fmt in (Format.CSR, Format.ELL):
         mats.append(convert(rnd, fmt))
+    # irregular power-law rows — the workload SELL-C-sigma exists for
+    pow_coo = make_matrix("powerlaw", np.random.default_rng(7))
+    mats.append(convert(pow_coo, Format.SELL))
+    if not smoke:
+        mats.append(convert(pow_coo, Format.CSR))
+        mats.append(convert(pow_coo, Format.ELL))
     return mats
 
 
@@ -412,6 +451,13 @@ def run_smoke(cache_path: str, iters: int = 3, inner: int = 2) -> List[KernelRec
             y_ref = _ops.spmv(A, x, backend="ref")
             np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_ref),
                                        rtol=1e-4, atol=1e-4)
+        # SELL: the persisted record must name the container geometry its
+        # timing was measured on — CI asserts a tuned (C, sigma) pair
+        # landed in the cache artifact.
+        sell_recs = [r for r in recs if r.fmt == "SELL"]
+        assert sell_recs, "smoke suite lost its SELL matrix"
+        assert all({"c", "sigma", "ts"} <= set(r.cfg) for r in sell_recs), \
+            f"SELL record missing container geometry: {sell_recs}"
         # rhs-width isolation: an spmm record tuned at b=1 must be found
         # in the b=1 bucket and invisible to a b=256 lookup.
         A = _suite(smoke=True)[0]

@@ -213,12 +213,24 @@ class FormatPolicy:
         policy-supplied half of the plan/execute switch pipeline.
 
         ``hints`` (``k=``, ``offsets=``, ``block_size=``, ...) forward to
-        ``plan_switch`` and short-circuit the device analysis.
+        ``plan_switch`` and short-circuit the device analysis. For SELL
+        the tuned kernel record's ``(c, sigma)`` — container geometry, not
+        kernel kwargs — seeds the plan when the caller gave no explicit
+        hint, so a measured slicing choice survives the format switch.
         """
         A = A.concrete if isinstance(A, DynamicMatrix) else A
         if fmt is None:
             fmt = self.select(A, x=x).best
-        return _plan_switch(A, Format(fmt), **hints)
+        fmt = Format(fmt)
+        if fmt == Format.SELL and "c" not in hints and "sigma" not in hints:
+            from repro.tuning import kernel_tune
+            rec = kernel_tune.best_config_for(
+                fmt, A.shape[0], A.shape[1], max(1, int(getattr(A, "nnz", 1))),
+                cache=self.cache)
+            if rec is not None and "c" in rec.cfg:
+                hints = dict(hints, c=int(rec.cfg["c"]),
+                             sigma=int(rec.cfg.get("sigma", 8 * rec.cfg["c"])))
+        return _plan_switch(A, fmt, **hints)
 
     def _kernel_decision(self, fmt: Format, feats: PatternFeatures,
                          op: str = "spmv", ncols: Optional[int] = None):

@@ -16,7 +16,8 @@ from repro.core import (DynamicMatrix, Format, SwitchDynamicMatrix,
                         plan_switch, random_coo, to_dense_np)
 from repro.core.convert import coo_to_ell
 
-PLANNED = [Format.CSR, Format.ELL, Format.DIA, Format.BSR, Format.HYB]
+PLANNED = [Format.CSR, Format.ELL, Format.DIA, Format.BSR, Format.HYB,
+           Format.SELL]
 
 
 def _mat(seed=0, shape=(300, 200), density=0.05, capacity=None):

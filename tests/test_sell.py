@@ -1,0 +1,382 @@
+"""SELL-C-sigma: container/plan/execute, Pallas kernel sweeps, routing.
+
+Covers the acceptance bar for SELL as a first-class dynamic format: plan
+JSON round-trips (permutation + slice caps are plan metadata), the jit-able
+numeric phase, f64-oracle kernel sweeps over ragged/power-law/empty-row
+shapes with bitwise-determinism asserts, batched (per-shard) plans, the
+kernel-tune (c, sigma) axis, and the measured-faster-than-ref veto.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Format, SwitchPlan, convert, convert_execute,
+                        convert_execute_batch, coo_from_arrays,
+                        coo_from_dense_np, coo_to_sell, plan_switch,
+                        plan_switch_batch, random_coo, sell_to_coo,
+                        to_dense_np)
+from repro.core.formats import COO, SELL
+from repro.kernels import ops as kops
+
+RNG = np.random.default_rng(0)
+
+
+def _powerlaw(seed, m, n, shape_a=1.3, scale=3.0):
+    """Power-law row lengths: the irregular-row family SELL exists for."""
+    rng = np.random.default_rng(seed)
+    counts = np.minimum(1 + (rng.pareto(shape_a, m) * scale).astype(np.int64),
+                        n)
+    rows = np.repeat(np.arange(m, dtype=np.int64), counts)
+    cols = np.concatenate([rng.choice(n, k, replace=False) for k in counts])
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    vals = np.where(np.abs(vals) < 1e-3, 1e-3, vals)
+    return coo_from_arrays(rows, cols, vals, (m, n))
+
+
+# ---------------------------------------------------------------------------
+# Container + conversion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,density", [
+    ((97, 83), 0.08), ((513, 401), 0.03), ((64, 64), 0.1), ((5, 7), 0.4),
+])
+@pytest.mark.parametrize("c,sigma", [(8, 64), (4, 4), (32, 256)])
+def test_sell_conversion_roundtrip(shape, density, c, sigma):
+    A = random_coo(1, shape, density=density)
+    S = coo_to_sell(A, c=c, sigma=sigma)
+    assert S.c == c and S.sigma >= c
+    np.testing.assert_allclose(to_dense_np(S), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(to_dense_np(sell_to_coo(S)), to_dense_np(A),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sell_handles_empty_matrix_and_empty_rows():
+    D = np.zeros((40, 30), np.float32)
+    S0 = convert(coo_from_dense_np(D, capacity=7), Format.SELL)
+    np.testing.assert_array_equal(to_dense_np(S0), D)
+    D[7, [2, 9, 11]] = [1.0, -2.0, 3.0]  # single live row, rest empty
+    S1 = convert(coo_from_dense_np(D), Format.SELL)
+    np.testing.assert_allclose(to_dense_np(S1), D)
+
+
+def test_sell_padding_waste_histogram():
+    from repro.obs import metrics
+
+    metrics.reset(["sell.padding_waste"])
+    convert(_powerlaw(2, 256, 256), Format.SELL)
+    snap = metrics.snapshot()["histograms"]
+    assert snap["sell.padding_waste"]["count"] == 1
+    assert 0.0 <= snap["sell.padding_waste"]["max"] < 1.0
+
+
+def test_sigma_sort_reduces_padding_vs_ell():
+    """On power-law rows the per-slice widths must beat the global kmax —
+    the entire point of the format."""
+    A = _powerlaw(3, 512, 512)
+    plan = plan_switch(A, Format.SELL, c=32, sigma=256)
+    ell = plan_switch(A, Format.ELL)
+    sell_slots = plan.sell_slice_ptrs[-1]
+    assert sell_slots < ell.ell_k * A.shape[0] // 2
+
+
+# ---------------------------------------------------------------------------
+# Plans: JSON round-trip, reuse, staleness
+# ---------------------------------------------------------------------------
+
+def test_sell_plan_json_roundtrip():
+    A = _powerlaw(4, 128, 96)
+    plan = plan_switch(A, Format.SELL, c=16, sigma=64)
+    assert plan.sell_c == 16 and plan.sell_sigma == 64
+    assert isinstance(plan.sell_perm, tuple)
+    assert isinstance(plan.sell_slice_ptrs, tuple)
+    assert len(plan.sell_slice_ptrs) == -(-128 // 16) + 1
+    assert isinstance(hash(plan), int)
+    rt = SwitchPlan.from_json(plan.to_json())
+    assert rt == plan
+
+
+def test_sell_plan_reuse_same_pattern_is_exact():
+    A = _powerlaw(5, 200, 150)
+    B = COO(A.row, A.col, A.data * -2.0, A.shape, A.nnz)
+    plan = plan_switch(A, Format.SELL)
+    ex = jax.jit(convert_execute, static_argnums=1)
+    np.testing.assert_allclose(to_dense_np(ex(B, plan)),
+                               -2.0 * to_dense_np(A), rtol=1e-5, atol=1e-5)
+
+
+def test_sell_stale_plan_drops_only_overflow():
+    """Guard-slot contract: live entries whose within-row rank exceeds the
+    planned slice cap are parked in the dropped guard slot; every planned
+    entry survives untouched (same contract as the distributed caps)."""
+    A = _powerlaw(6, 64, 64)
+    plan = plan_switch(A, Format.SELL, c=8, sigma=32)
+    r = np.asarray(A.row)
+    c_ = np.asarray(A.col)
+    v = np.asarray(A.data)
+    # append extra live entries to row 0 in columns it does not touch yet
+    free = np.setdiff1d(np.arange(64), c_[r == 0])[:8]
+    r2 = np.concatenate([r, np.zeros(len(free), np.int64)])
+    c2 = np.concatenate([c_, free])
+    v2 = np.concatenate([v, np.full(len(free), 7.0, np.float32)])
+    B = coo_from_arrays(r2, c2, v2, A.shape)
+    out = to_dense_np(convert_execute(B, plan))
+    expect = to_dense_np(A).copy()
+    # row 0 may keep as many of the new entries as its planned width allows;
+    # all other rows must be bit-exact and nothing may corrupt the storage
+    np.testing.assert_allclose(out[1:], expect[1:], rtol=1e-6, atol=1e-6)
+    kept = np.flatnonzero(out[0] != expect[0])
+    assert set(kept) <= set(free.tolist())
+
+
+def test_distplan_roundtrip_carries_sell_plans():
+    from repro.core import hpcg
+    from repro.core.distributed import (DistPlan, _check_plan_fits,
+                                        _split_caps, partition_execute_jit,
+                                        plan_dist_formats, plan_partition,
+                                        split_local_execute_jit)
+
+    prob = hpcg.generate_problem(4, 4, 8)
+    plan = plan_partition(prob.row, prob.col, prob.val, prob.shape, 4)
+    icap, bcap = _split_caps(prob.row, prob.col, prob.val, plan.mp, 4)
+    plan = dataclasses.replace(plan, interior_cap=icap, boundary_cap=bcap,
+                               pattern_sig="deadbeef")
+    local, remote = partition_execute_jit(prob.row, prob.col, prob.val,
+                                          plan=plan)
+    interior, boundary = split_local_execute_jit(local, remote, mp=plan.mp,
+                                                 icap=icap, bcap=bcap)
+    cands = (Format.CSR, Format.ELL, Format.SELL)
+    plan = plan_dist_formats(interior, remote, plan, cands,
+                             boundary=boundary)
+    sell_plan = plan.interior_plans[cands.index(Format.SELL)]
+    assert Format(sell_plan.target) == Format.SELL
+    # batch plans share static slice caps; the per-part permutation is
+    # derived on device, never memoised
+    assert sell_plan.sell_perm is None
+    assert sell_plan.sell_slice_ptrs is not None
+    rt = DistPlan.from_json(plan.to_json())
+    assert rt == plan
+    # staleness machinery unchanged by the new fields: shrunken split caps
+    # on a plan carrying SELL plans still fail loudly
+    stale = dataclasses.replace(plan, interior_cap=max(1, icap // 2))
+    with pytest.raises(ValueError, match="stale DistPlan"):
+        _check_plan_fits(prob.row, prob.col, stale, val=prob.val)
+
+
+# ---------------------------------------------------------------------------
+# Batched (per-shard) plans
+# ---------------------------------------------------------------------------
+
+def test_sell_batch_plan_shared_caps_fit_every_part():
+    parts_np = [np.asarray(to_dense_np(_powerlaw(10 + i, 96, 80)))
+                for i in range(3)]
+    cap = max(int((d != 0).sum()) for d in parts_np) + 50
+    coos = [coo_from_dense_np(d, capacity=cap) for d in parts_np]
+    stacked = COO(jnp.stack([p.row for p in coos]),
+                  jnp.stack([p.col for p in coos]),
+                  jnp.stack([p.data for p in coos]),
+                  (96, 80), cap)
+    plan = plan_switch_batch(stacked, Format.SELL, c=8, sigma=64)
+    assert plan.sell_perm is None
+    # shared caps >= each part's own planned caps, elementwise
+    for coo in coos:
+        own = plan_switch(coo, Format.SELL, c=8, sigma=64)
+        shared = np.diff(np.asarray(plan.sell_slice_ptrs))
+        mine = np.diff(np.asarray(own.sell_slice_ptrs))
+        assert (shared >= mine).all()
+    out = convert_execute_batch(stacked, plan)
+    for i, d in enumerate(parts_np):
+        part = jax.tree_util.tree_map(lambda t: t[i], out)
+        np.testing.assert_allclose(to_dense_np(part), d, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: cfg sweeps vs the f64 dense oracle
+# ---------------------------------------------------------------------------
+
+SELL_GEOMS = [(8, 64), (32, 256), (64, 64)]
+SELL_TS = [1, 2, 8]
+
+
+@pytest.mark.parametrize("c,sigma", SELL_GEOMS)
+@pytest.mark.parametrize("ts", SELL_TS)
+@pytest.mark.parametrize("shape", [(97, 83), (513, 401)])
+def test_sell_kernel_cfg_sweep_ragged(shape, c, sigma, ts):
+    A = coo_to_sell(_powerlaw(20, *shape), c=c, sigma=sigma)
+    x = jnp.asarray(RNG.standard_normal(shape[1]).astype(np.float32))
+    y = kops.sell_spmv(A, x, cfg={"ts": ts})
+    oracle = to_dense_np(A).astype(np.float64) @ np.asarray(x, np.float64)
+    np.testing.assert_allclose(np.asarray(y, np.float64), oracle,
+                               rtol=2e-5, atol=2e-5)
+    # bitwise determinism of a fixed config
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(kops.sell_spmv(A, x,
+                                                            cfg={"ts": ts})))
+
+
+@pytest.mark.parametrize("ts", SELL_TS)
+def test_sell_kernel_empty_rows(ts):
+    """Empty slices (zero-width windows) under every launch geometry."""
+    D = np.zeros((300, 300), np.float32)
+    mask = RNG.random((100, 300)) < 0.05
+    D[200:, :] = np.where(mask, RNG.standard_normal((100, 300)),
+                          0).astype(np.float32)
+    A = coo_to_sell(coo_from_dense_np(D), c=16, sigma=128)
+    x = jnp.asarray(RNG.standard_normal(300).astype(np.float32))
+    y = kops.sell_spmv(A, x, cfg={"ts": ts})
+    np.testing.assert_allclose(np.asarray(y, np.float64),
+                               D.astype(np.float64) @ np.asarray(x, np.float64),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b", [1, 5, 16])
+def test_sell_spmm_and_spmm_t_sweep(b):
+    A = coo_to_sell(_powerlaw(21, 200, 160), c=16, sigma=64)
+    D = to_dense_np(A)
+    B = jnp.asarray(RNG.standard_normal((160, b)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(kops.sell_spmm(A, B)),
+                               D @ np.asarray(B), rtol=1e-4, atol=1e-4)
+    X = jnp.asarray(RNG.standard_normal((b, 160)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(kops.sell_spmm_t(A, X)),
+                               np.asarray(X) @ D.T, rtol=1e-4, atol=1e-4)
+
+
+def test_sell_core_pallas_backend_agrees_with_ref():
+    from repro.core import spmv
+
+    A = convert(_powerlaw(22, 256, 256), Format.SELL)
+    x = jnp.asarray(RNG.standard_normal(256).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(spmv(A, x, backend="pallas")),
+                               np.asarray(spmv(A, x, backend="ref")),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sell_vmem_budget_fallback():
+    n = 2_000_000  # x alone blows the VMEM budget -> ref fallback
+    rows = np.arange(256, dtype=np.int64)
+    A = coo_to_sell(coo_from_arrays(rows, rows * 7000,
+                                    np.ones(256, np.float32), (256, n)))
+    y = kops.sell_spmv(A, jnp.ones((n,), jnp.float32))
+    np.testing.assert_allclose(np.asarray(y), np.ones(256), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Tuning: (c, sigma) on the kernel-tune grid, veto, policy threading
+# ---------------------------------------------------------------------------
+
+def test_kernel_tune_sell_records_container_geometry(tmp_path):
+    from repro.tuning.cache import SelectionCache
+    from repro.tuning.kernel_tune import (best_config, default_grid,
+                                          tune_kernel)
+
+    A = coo_to_sell(_powerlaw(30, 512, 512), c=32, sigma=256)
+    grid = default_grid(A, smoke=True)
+    assert all({"c", "sigma", "ts"} <= set(g) for g in grid)
+    assert any(g["c"] != A.c for g in grid)  # a rebuild variant is searched
+    cache = SelectionCache(str(tmp_path / "k.json"))
+    rec = tune_kernel(A, cache=cache, grid=grid, iters=2, inner=1)
+    assert rec.fmt == "SELL" and {"c", "sigma", "ts"} <= set(rec.cfg)
+    fresh = best_config(A, cache=SelectionCache(str(tmp_path / "k.json")))
+    assert fresh is not None and fresh.cfg == rec.cfg
+
+
+def test_kernel_route_veto_respected_for_sell(tmp_path, monkeypatch):
+    """auto must never route a SELL config that measured slower than ref."""
+    import json
+
+    from repro.core import ops as core_ops
+    from repro.tuning.cache import CACHE_PATH_ENV, SelectionCache
+    from repro.tuning.kernel_tune import KernelRecord, kernel_key
+
+    path = str(tmp_path / "k.json")
+    monkeypatch.setenv(CACHE_PATH_ENV, path)
+    A = coo_to_sell(_powerlaw(31, 128, 128), c=8, sigma=64)
+    cache = SelectionCache(path)
+    losing = KernelRecord(fmt="SELL", op="spmv",
+                          cfg={"c": 8, "sigma": 64, "ts": 2},
+                          kernel_us=100.0, ref_us=50.0)
+    cache.put_raw(kernel_key(Format.SELL, A.shape[0], A.shape[1],
+                             int(A.nnz)), losing.to_json())
+    backend, _ = core_ops.kernel_route(A, cache=SelectionCache(path))
+    assert backend == "ref"
+    winning = dataclasses.replace(losing, kernel_us=10.0)
+    cache.put_raw(kernel_key(Format.SELL, A.shape[0], A.shape[1],
+                             int(A.nnz)), winning.to_json())
+    backend, cfg = core_ops.kernel_route(A, cache=SelectionCache(path))
+    assert backend == "pallas" and cfg == winning.cfg
+
+
+def test_policy_plan_for_threads_tuned_geometry(tmp_path):
+    """A cached SELL kernel record's (c, sigma) must seed the plan the
+    policy hands out — the measured slicing survives the format switch."""
+    from repro.tuning import FormatPolicy
+    from repro.tuning.cache import SelectionCache
+    from repro.tuning.kernel_tune import KernelRecord, kernel_key
+
+    A = _powerlaw(32, 256, 256)
+    path = str(tmp_path / "cache.json")
+    cache = SelectionCache(path)
+    rec = KernelRecord(fmt="SELL", op="spmv",
+                       cfg={"c": 64, "sigma": 512, "ts": 4},
+                       kernel_us=10.0, ref_us=100.0)
+    cache.put_raw(kernel_key(Format.SELL, 256, 256, int(A.nnz)),
+                  rec.to_json())
+    pol = FormatPolicy("analytic", cache=cache)
+    plan = pol.plan_for(A, fmt=Format.SELL)
+    assert plan.sell_c == 64 and plan.sell_sigma == 512
+    # an explicit hint still wins over the record
+    plan = pol.plan_for(A, fmt=Format.SELL, c=8)
+    assert plan.sell_c == 8
+
+
+def test_ell_overflow_reports_row_and_required_k():
+    """Satellite fix: the overflow error names the offending row and the
+    width it needs, not just 'overflow'."""
+    from repro.core.convert import coo_to_ell
+
+    d = np.zeros((16, 16), np.float32)
+    d[11, :7] = 1.0
+    d[3, :2] = 1.0
+    A = coo_from_dense_np(d)
+    with pytest.raises(ValueError, match=r"row 11 holds 7"):
+        coo_to_ell(A, k=2)
+
+
+# ---------------------------------------------------------------------------
+# Selection: SELL is reachable through the auto route
+# ---------------------------------------------------------------------------
+
+def test_sell_in_default_candidate_menus():
+    from repro.core.dynamic import DEFAULT_CANDIDATES
+    from repro.tuning import corpus
+
+    assert Format.SELL in DEFAULT_CANDIDATES
+    assert Format.SELL in corpus.DEFAULT_CANDIDATES
+
+
+def test_profile_select_considers_sell():
+    from repro.tuning.engines import profile_select
+
+    A = _powerlaw(33, 256, 256)
+    x = jnp.ones((256,), jnp.float32)
+    rep = profile_select(A, x, candidates=(Format.CSR, Format.SELL),
+                         iters=2, inner=1)
+    assert set(rep.times) == {Format.CSR, Format.SELL}
+    assert rep.best in (Format.CSR, Format.SELL)
+
+
+def test_dynamic_matrix_activates_sell():
+    from repro.core import DynamicMatrix
+
+    A = _powerlaw(34, 128, 128)
+    dm = DynamicMatrix(A)
+    plan = dm.plan(Format.SELL)
+    switched = dm.activate(Format.SELL, plan=plan)
+    assert switched.active == Format.SELL
+    np.testing.assert_allclose(to_dense_np(switched.concrete),
+                               to_dense_np(A), rtol=1e-6, atol=1e-6)
