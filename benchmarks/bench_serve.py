@@ -20,6 +20,12 @@ Three row families, all landing in ``BENCH_serve.json``:
       (batched jit'd prefill + slot-static decode steps) on the smoke
       config, reported as us/token with tokens/s derived.
 
+  serve_latency_b{B}
+      Per-request end-to-end latency percentiles (p50 as the headline,
+      p95/p99 and per-phase queue/prefill/decode p50s derived) from the
+      DecodeEngine's own request telemetry, with the request queue
+      oversubscribed 3x so admission waiting is actually measured.
+
 Run: PYTHONPATH=src python -m benchmarks.run --only serve
 """
 from __future__ import annotations
@@ -198,12 +204,63 @@ def run_decode(widths=WIDTHS, quick: bool = False, arch="stablelm_1_6b"):
     return rows
 
 
+def run_latency(widths=(1, 4), quick: bool = False, arch="stablelm_1_6b"):
+    """Per-request latency percentiles from the engine's own telemetry.
+
+    Drives a full submit->serve run per slot width with more requests than
+    slots (so queueing is real), then reads the ``DecodeEngine`` request
+    spans back out of ``request_log`` / the ``serve.*`` histograms:
+
+      serve_latency_b{B}   us_per_call = p50 end-to-end request latency;
+                           derived carries p95/p99, per-phase p50s
+                           (queue/prefill/decode) and the peak queue wait.
+
+    These are the rows the regression harness tracks for the serving
+    loop — tokens/s alone hides admission stalls; the ROADMAP's serving
+    item asks for latency explicitly."""
+    import jax
+    from repro.configs import get_config
+    from repro.launch.serve import DecodeEngine, serve
+    from repro.models import build_model
+    from repro.obs import metrics
+
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    plen, max_new = 8, (4 if quick else 8)
+    rows = []
+    for b in widths:
+        nreq = 3 * b  # oversubscribe so queue_us measures real waiting
+        engine = DecodeEngine(model, params, slots=b,
+                              max_len=plen + max_new + 8)
+        reqs = [(i, rng.integers(0, cfg.vocab, (plen,)).astype(np.int32))
+                for i in range(nreq)]
+        metrics.reset(["serve.latency_us", "serve.queue_us",
+                       "serve.prefill_us", "serve.decode_us",
+                       "serve.queue_depth"])
+        serve(engine, reqs, max_new=max_new)
+        q = metrics.quantiles("serve.latency_us")
+        depth_peak = max((r["queue_us"] for r in engine.request_log),
+                        default=0.0)
+        rows.append((
+            f"serve_latency_b{b}", q["p50"] or 0.0,
+            f"p95_us={q['p95']:.0f};p99_us={q['p99']:.0f};"
+            f"queue_p50_us={metrics.quantile('serve.queue_us', 0.5):.0f};"
+            f"prefill_p50_us={metrics.quantile('serve.prefill_us', 0.5):.0f};"
+            f"decode_p50_us={metrics.quantile('serve.decode_us', 0.5):.0f};"
+            f"requests={len(engine.request_log)};slots={b};"
+            f"queue_peak_us={depth_peak:.0f}"))
+    return rows
+
+
 def run(widths=WIDTHS, quick: bool = False):
     rows = []
     rows += run_spmm(widths, quick=quick)
     rows += run_layers(widths, quick=quick)
     rows += run_sparse_mlp(widths, quick=quick)
     rows += run_decode(widths, quick=quick)
+    rows += run_latency(quick=quick)
     return rows
 
 

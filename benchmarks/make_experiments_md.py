@@ -172,6 +172,54 @@ def obs_table() -> str:
     return "\n".join(out)
 
 
+def trajectory_table(max_runs: int = 8, max_rows: int = 12) -> str:
+    """Perf-over-time pivot of results/history/trajectory.jsonl: one column
+    per recorded run (newest ``max_runs``), one row per headline bench row.
+
+    Headline = the rows the regression gate watches hardest: speedup-vs-ref
+    and tokens/s rows. Values are the comparable metric ``repro.obs.regress``
+    classifies each row into, so a column-to-column drift here is exactly
+    what the gate would flag."""
+    from repro.obs import regress
+
+    entries = regress.load_history(os.path.join(ROOT, regress.DEFAULT_HISTORY))
+    if not entries:
+        return ("_no results/history/trajectory.jsonl — every "
+                "`python -m benchmarks.run` invocation appends to it_")
+    # group entries into runs by timestamp (one run writes several artifacts
+    # within the same invocation; the ts string is per-artifact but close —
+    # use (ts minute, git_rev) as the run key, newest last)
+    runs: dict = {}
+    for e in entries:
+        key = (e.get("ts", "")[:16], e.get("git_rev"))
+        run = runs.setdefault(key, {"ts": e.get("ts", ""), "rows": {}})
+        for r in e.get("rows", []):
+            cls, v = regress.classify(r)
+            if cls in ("speedup", "throughput"):
+                run["rows"][r["name"]] = (cls, v)
+    keys = sorted(runs)[-max_runs:]
+    names = sorted({n for k in keys for n in runs[k]["rows"]})[:max_rows]
+    if not names:
+        return "_trajectory.jsonl holds no speedup/throughput rows yet_"
+    heads = [runs[k]["ts"][5:16].replace("T", " ") or "?" for k in keys]
+    out = ["| row | " + " | ".join(heads) + " |",
+           "|---|" + "---|" * len(keys)]
+    for name in names:
+        vals = []
+        for k in keys:
+            cv = runs[k]["rows"].get(name)
+            vals.append("-" if cv is None else
+                        (f"{cv[1]:.2f}x" if cv[0] == "speedup"
+                         else f"{cv[1]:.0f} tok/s"))
+        out.append(f"| `{name}` | " + " | ".join(vals) + " |")
+    out.append("")
+    out.append(f"Newest {len(keys)} recorded runs; speedup rows are "
+               "vs-reference ratios, throughput rows tokens/s. Gate any "
+               "run against the blessed baseline with "
+               "`python -m repro.obs.regress`.")
+    return "\n".join(out)
+
+
 def main():
     parts = ["## Generated tables (benchmarks/make_experiments_md.py)\n"]
     parts.append("### Dry-run, single pod (16x16 = 256 chips)\n")
@@ -188,6 +236,8 @@ def main():
     parts.append(powerlaw_table())
     parts.append("\n### Exchange/compute overlap per shard count (BENCH_obs.json)\n")
     parts.append(obs_table())
+    parts.append("\n### Perf trajectory (results/history/trajectory.jsonl)\n")
+    parts.append(trajectory_table())
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         f.write("\n".join(parts) + "\n")

@@ -223,6 +223,21 @@ def main(argv=None):
         print("wrote", _emit_json(os.path.join(args.json_dir, "BENCH_serve.json"),
                                   serve_rows, meta))
 
+    # every invocation extends the perf trajectory: one JSONL entry per
+    # artifact with just the rows THIS run measured (regress renders the
+    # table; `python -m repro.obs.regress` gates against the baseline).
+    from repro.obs import regress as _regress
+    history_dir = os.path.join(args.json_dir, _regress.DEFAULT_HISTORY)
+    for artifact, arows in (("BENCH_spmv", spmv_rows),
+                            ("BENCH_convert", convert_rows),
+                            ("BENCH_dist", dist_rows),
+                            ("BENCH_hpcg", hpcg_rows),
+                            ("BENCH_obs", obs_rows),
+                            ("BENCH_serve", serve_rows)):
+        if arows:
+            _regress.append_history(artifact, arows, meta,
+                                    history_dir=history_dir)
+
     # roofline table pointer (if the dry-run has produced results)
     if not only or "roofline" in only:
         try:

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BSR, COO, CSR, DIA, ELL, Dense, HYB, SELL
+from repro.obs import ledger as _ledger
 from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
 
@@ -78,23 +79,60 @@ def kernel_route(A, op: str = "spmv", cache=None, ncols=None):
         A = getattr(A, "concrete", A)
     if not hasattr(A, "format"):
         _metrics.inc("kernel.route.ref")
+        if _ledger.enabled():
+            _ledger.record("kernel.route", op=op, fmt=type(A).__name__,
+                           route="ref", reason="not a sparse container — "
+                           "no kernel exists for it")
         return "ref", None
     from repro.tuning import kernel_tune  # lazy: tuning imports core
+    fmt_name = getattr(A.format, "name", str(A.format))
     rec = kernel_tune.best_config(A, op=op, ncols=ncols, cache=cache)
     if rec is not None and rec.speedup >= 1.0:
         _metrics.inc("kernel.route.pallas")
         if _trace.mode() != "off":
             _trace.event("kernel.route", op=op, route="pallas",
-                         fmt=getattr(A.format, "name", str(A.format)),
-                         cfg=str(dict(rec.cfg)))
+                         fmt=fmt_name, cfg=str(dict(rec.cfg)))
+        if _ledger.enabled():
+            _ledger.record("kernel.route", op=op, fmt=fmt_name,
+                           route="pallas", kernel=_route_kernel_dict(rec),
+                           bucket=_route_bucket(A, op, ncols))
         return "pallas", dict(rec.cfg)
     # distinguish "no record" from "a record exists but measured slower"
     _metrics.inc("kernel.route.veto" if rec is not None else "kernel.route.ref")
     if _trace.mode() != "off":
         _trace.event("kernel.route", op=op,
                      route="veto" if rec is not None else "ref",
-                     fmt=getattr(A.format, "name", str(A.format)))
+                     fmt=fmt_name)
+    if _ledger.enabled():
+        if rec is not None:
+            _ledger.record("kernel.route", op=op, fmt=fmt_name, route="veto",
+                           kernel=_route_kernel_dict(rec),
+                           bucket=_route_bucket(A, op, ncols),
+                           reason=f"cached kernel measured {rec.speedup:.2f}x "
+                                  "vs ref (< 1.0) — reference path kept")
+        else:
+            _ledger.record("kernel.route", op=op, fmt=fmt_name, route="ref",
+                           bucket=_route_bucket(A, op, ncols),
+                           reason="no tuned record for this bucket — an "
+                                  "unmeasured kernel is never presumed faster")
     return "ref", None
+
+
+def _route_kernel_dict(rec) -> dict:
+    return {"fmt": rec.fmt, "op": rec.op, "cfg": dict(rec.cfg),
+            "kernel_us": float(rec.kernel_us), "ref_us": float(rec.ref_us),
+            "speedup": float(rec.speedup)}
+
+
+def _route_bucket(A, op: str, ncols) -> str:
+    """The cache key ``kernel_route`` consulted (ledger context only)."""
+    from repro.tuning import kernel_tune
+    try:
+        return kernel_tune.kernel_key(
+            A.format, A.shape[0], A.shape[1],
+            max(1, int(getattr(A, "nnz", 1))), op=op, ncols=ncols)
+    except Exception:
+        return "?"
 
 
 def _spmv_coo(A: COO, x):

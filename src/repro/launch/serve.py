@@ -34,6 +34,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.obs import ledger as _ledger
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 
 def _pow2_at_least(n: int, cap: int) -> int:
@@ -50,6 +53,17 @@ class DecodeEngine:
     admits as many as there are free slots in ONE ``prefill_cache`` call,
     padded to pow2 (rows, prompt-len) buckets — pad rows replicate the
     last real request so duplicate cache scatters write identical values.
+
+    Every request is measured through its lifecycle (submit -> admit ->
+    finish): per-phase latencies land in the ``serve.queue_us`` /
+    ``serve.prefill_us`` / ``serve.decode_us`` / ``serve.latency_us``
+    histograms (p50/p95/p99 via ``metrics.quantiles``), the pending-queue
+    depth in the ``serve.queue_depth`` gauge+histogram (sampled at each
+    refill), finished requests in :attr:`request_log` (JSON-ready dicts —
+    what ``bench_serve`` turns into latency rows) and as ``serve.request``
+    ledger records. A batched prefill is one device call for n requests,
+    so its wall time is attributed to each admitted request as the
+    per-request share (total / n).
     """
 
     def __init__(self, model, params, slots: int, max_len: int):
@@ -65,6 +79,8 @@ class DecodeEngine:
         self.request_ids = [-1] * slots
         self.pending: List[Tuple[int, np.ndarray]] = []
         self.prefill_calls = 0
+        self.request_log: List[dict] = []   # finished-request telemetry
+        self._req_meta: dict = {}           # rid -> in-flight timestamps
         self._step = jax.jit(model.decode_step)
         self._prefill = {}  # (R, P) bucket -> jit'd prefill_cache
 
@@ -73,22 +89,31 @@ class DecodeEngine:
     def submit(self, rid: int, prompt: np.ndarray) -> None:
         """Queue a request; admitted at the next :meth:`refill`."""
         self.pending.append((rid, np.asarray(prompt, np.int32)))
+        self._req_meta[rid] = {"t_submit": time.perf_counter_ns()}
+        _metrics.inc("serve.requests")
 
     def refill(self) -> int:
         """Admit pending requests into free slots (one batched prefill).
 
         Returns the number of requests admitted."""
+        depth = len(self.pending)
+        _metrics.set_gauge("serve.queue_depth", depth)
+        _metrics.observe("serve.queue_depth", depth)
         free = np.where(~self.active)[0]
-        n = min(len(free), len(self.pending))
+        n = min(len(free), depth)
         if n == 0:
             return 0
         batch, self.pending = self.pending[:n], self.pending[n:]
         slots = free[:n]
-        if self.model.supports_prefill_cache():
-            first = self._prefill_batched(batch, slots)
-        else:
-            first = [self._prefill_by_decode(prompt, int(s))
-                     for (_, prompt), s in zip(batch, slots)]
+        t0 = time.perf_counter_ns()
+        with _trace.span("serve.refill", admitted=n):
+            if self.model.supports_prefill_cache():
+                first = self._prefill_batched(batch, slots)
+            else:
+                first = [self._prefill_by_decode(prompt, int(s))
+                         for (_, prompt), s in zip(batch, slots)]
+        t_admit = time.perf_counter_ns()
+        prefill_share_us = (t_admit - t0) / 1e3 / n
         for (rid, prompt), s, tok in zip(batch, slots, first):
             s = int(s)
             self.active[s] = True
@@ -96,6 +121,13 @@ class DecodeEngine:
             self.tokens[s] = tok
             self.pos[s] = len(prompt)
             self.outputs[s] = [tok]
+            meta = self._req_meta.get(rid)
+            if meta is not None:
+                meta["t_admit"] = t_admit
+                meta["queue_us"] = (t0 - meta["t_submit"]) / 1e3
+                meta["prefill_us"] = prefill_share_us
+                _metrics.observe("serve.queue_us", meta["queue_us"])
+                _metrics.observe("serve.prefill_us", prefill_share_us)
         return n
 
     def _prefill_batched(self, batch, slots) -> List[int]:
@@ -160,7 +192,27 @@ class DecodeEngine:
             if done:
                 finished.append((self.request_ids[s], self.outputs[s]))
                 self.active[s] = False
+                self._finish(self.request_ids[s], len(self.outputs[s]))
         return finished
+
+    def _finish(self, rid: int, ntokens: int) -> None:
+        """Close a request's telemetry span: per-phase latencies into the
+        serve histograms, the request_log, and the decision ledger."""
+        _metrics.inc("serve.tokens", ntokens)
+        meta = self._req_meta.pop(rid, None)
+        if meta is None or "t_admit" not in meta:
+            return
+        now = time.perf_counter_ns()
+        decode_us = (now - meta["t_admit"]) / 1e3
+        total_us = (now - meta["t_submit"]) / 1e3
+        _metrics.observe("serve.decode_us", decode_us)
+        _metrics.observe("serve.latency_us", total_us)
+        entry = {"rid": rid, "queue_us": meta["queue_us"],
+                 "prefill_us": meta["prefill_us"], "decode_us": decode_us,
+                 "total_us": total_us, "tokens": ntokens}
+        self.request_log.append(entry)
+        if _ledger.enabled():
+            _ledger.record("serve.request", **entry)
 
 
 def serve(engine: DecodeEngine, requests, max_new: int, eos: int = -1):

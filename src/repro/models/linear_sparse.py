@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import (DynamicMatrix, Format, coo_from_dense_np, convert,
                         spmm_t)
+from repro.obs import metrics as _metrics
 from repro.tuning.policy import FormatPolicy
 
 # Weight matrices are ragged post-pruning; DIA is never competitive there,
@@ -94,8 +95,10 @@ class LinearSparse:
                   else FormatPolicy(tune, candidates=WEIGHT_CANDIDATES,
                                     profile_iters=3))
         fmt = policy.select(self.weight, op="spmm_t", ncols=ncols).best
+        _metrics.inc("serve.retune")
         if fmt == self.format:
             return self
+        _metrics.inc("serve.format_switch")
         return self.activate(fmt, **conv_kwargs)
 
     def __call__(self, x):

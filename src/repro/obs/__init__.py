@@ -1,11 +1,19 @@
-"""repro.obs — structured tracing, counters, and per-phase profiling.
+"""repro.obs — the perf flight recorder: tracing, metrics, decisions.
 
-Three small, zero-heavy-dep pieces:
+Small, zero-heavy-dep pieces:
 
 * :mod:`repro.obs.trace`   — ``span()``/``event()`` tracer gated by
   ``REPRO_TRACE=off|summary|full``, Chrome/Perfetto export, ``summary()``.
-* :mod:`repro.obs.metrics` — named monotonic counters + histograms with
+* :mod:`repro.obs.metrics` — named monotonic counters, gauges, and
+  fixed-bucket histograms (p50/p95/p99 via :func:`metrics.quantile`) with
   ``snapshot()``/``reset()`` and order-independent ``scope()`` deltas.
+* :mod:`repro.obs.ledger`  — bounded ring of structured decision records
+  (format selections with CART paths, kernel-route vetoes, switch plans,
+  serving requests), gated by ``REPRO_LEDGER`` (on by default).
+* :mod:`repro.obs.explain` — replays the ledger into a human-readable
+  decision trail. CLI: ``python -m repro.obs.explain``.
+* :mod:`repro.obs.regress` — bench-trajectory store + noise-aware
+  baseline regression gate. CLI: ``python -m repro.obs.regress``.
 * :mod:`repro.obs.report`  — per-phase attribution tables
   (select/plan/convert/kernel/exchange/solver) from a live or exported
   trace, plus the distributed exchange-overlap table from
@@ -14,9 +22,11 @@ Three small, zero-heavy-dep pieces:
 :func:`repro.obs.provenance.env_info` records run provenance (jax
 version, backend, devices, git rev) in every ``BENCH_*.json``.
 """
+from repro.obs import ledger
 from repro.obs import metrics
 from repro.obs import trace
 from repro.obs.provenance import env_info
 from repro.obs.trace import event, span, tracing
 
-__all__ = ["metrics", "trace", "span", "event", "tracing", "env_info"]
+__all__ = ["ledger", "metrics", "trace", "span", "event", "tracing",
+           "env_info"]

@@ -46,7 +46,10 @@ import json
 import os
 import threading
 import time
+import warnings
 from typing import Dict, List, Optional
+
+from repro.obs import metrics as _metrics
 
 ENV_VAR = "REPRO_TRACE"
 MODES = ("off", "summary", "full")
@@ -139,6 +142,9 @@ def _record(ev: dict) -> None:
                 _RING[_RING_POS % RING_CAPACITY] = ev
                 _DROPPED += 1
                 _RING_POS += 1
+                # surfaced outside the trace itself: a full-mode run that
+                # silently wrapped used to look complete in every export.
+                _metrics.inc("trace.dropped_events")
 
 
 class _Span:
@@ -267,11 +273,12 @@ def dropped() -> int:
 
 def clear() -> None:
     """Drop all collected events and aggregates (mode is unchanged)."""
-    global _RING_POS, _DROPPED
+    global _RING_POS, _DROPPED, _TRUNCATION_WARNED
     with _LOCK:
         _RING.clear()
         _RING_POS = 0
         _DROPPED = 0
+        _TRUNCATION_WARNED = False
         _AGG.clear()
 
 
@@ -292,14 +299,29 @@ def summary(sort_by: str = "total_us") -> str:
     return "\n".join(out)
 
 
+_TRUNCATION_WARNED = False
+
+
 def export_chrome(path: str) -> str:
     """Write the ring buffer as a Chrome/Perfetto ``trace.json``.
 
     Open with ``chrome://tracing`` or https://ui.perfetto.dev. Span attrs
     land in ``args``; the span/parent ids ride along for programmatic
-    consumers (``repro.obs.report`` reads them back).
+    consumers (``repro.obs.report`` reads them back). When the ring
+    wrapped the export only holds the newest ``RING_CAPACITY`` events —
+    warned once per process (and recorded in the doc's
+    ``otherData.dropped_events`` and the ``trace.dropped_events``
+    counter) so a truncated trace is never mistaken for a complete one.
     """
+    global _TRUNCATION_WARNED
     evs = events()
+    if _DROPPED and not _TRUNCATION_WARNED:
+        _TRUNCATION_WARNED = True
+        warnings.warn(
+            f"trace ring wrapped: export is truncated to the newest "
+            f"{RING_CAPACITY} events ({_DROPPED} older events dropped — "
+            f"see the trace.dropped_events counter)", RuntimeWarning,
+            stacklevel=2)
     out = []
     for e in evs:
         out.append({"name": e["name"], "ph": "X", "cat": e["name"].split(".")[0],

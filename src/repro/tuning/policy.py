@@ -29,12 +29,13 @@ import numpy as np
 
 from repro.core.convert import (SwitchPlan, plan_switch as _plan_switch,
                                 to_coo as _to_coo_fn)
+from repro.obs import ledger as _ledger
 from repro.obs import trace as _trace
 from repro.core.dynamic import DEFAULT_CANDIDATES, DynamicMatrix
 from repro.core.formats import Format
 from repro.tuning.cache import SelectionCache
 from repro.tuning.engines import TuneReport, analytic_select, profile_select
-from repro.tuning.features import PatternFeatures, batch_features
+from repro.tuning.features import FEATURE_NAMES, PatternFeatures, batch_features
 from repro.tuning.tree import DecisionTree, load_default_tree
 
 MODES = ("ml", "profile", "analytic", "cached")
@@ -93,16 +94,27 @@ class FormatPolicy:
         matching width bucket. The default (``"spmv"``) preserves the
         historical pattern-only behaviour and cache keys.
         """
+        # detail is the decision ledger's workspace: the inner tiers fill
+        # in what they actually did (cache hit/miss, tree path, scores,
+        # kernel pin/veto) only when the ledger wants a record.
+        detail: Optional[dict] = {} if _ledger.enabled() else None
         if _trace.mode() == "off":
-            return self._select(A, x, op, ncols)
-        with _trace.span("select.policy", mode=self.mode, op=op) as sp:
-            rep = self._select(A, x, op, ncols)
-            sp.set(chosen=Format(rep.best).name, tier=rep.mode,
-                   backend=rep.backend or "auto")
+            rep = self._select(A, x, op, ncols, detail)
+        else:
+            with _trace.span("select.policy", mode=self.mode, op=op) as sp:
+                rep = self._select(A, x, op, ncols, detail)
+                sp.set(chosen=Format(rep.best).name, tier=rep.mode,
+                       backend=rep.backend or "auto")
+        if detail is not None:
+            _ledger.record("format.select", mode=self.mode, op=op,
+                           ncols=ncols, chosen=Format(rep.best).name,
+                           tier=rep.mode, backend=rep.backend,
+                           cfg=dict(rep.cfg) if rep.cfg else None, **detail)
         return rep
 
     def _select(self, A, x=None, op: str = "spmv",
-                ncols: Optional[int] = None) -> TuneReport:
+                ncols: Optional[int] = None,
+                detail: Optional[dict] = None) -> TuneReport:
         A = A.concrete if isinstance(A, DynamicMatrix) else A
         if self.mode == "profile":
             if x is None:
@@ -112,14 +124,19 @@ class FormatPolicy:
                     x = jnp.ones((ncols or 1, A.shape[1]), A.dtype)
                 else:
                     x = jnp.ones((A.shape[1],), A.dtype)
-            return profile_select(A, x, candidates=self.candidates,
-                                  iters=self.profile_iters, op=op)
+            rep = profile_select(A, x, candidates=self.candidates,
+                                 iters=self.profile_iters, op=op)
+            _fill_scores(detail, rep)
+            return rep
 
         feats = PatternFeatures.from_coo(_to_coo_fn(A))
+        _fill_features(detail, feats)
         if self.mode == "analytic":
-            return analytic_select(feats.to_stats(), candidates=self.candidates)
+            rep = analytic_select(feats.to_stats(), candidates=self.candidates)
+            _fill_scores(detail, rep)
+            return rep
         if self.mode == "ml":
-            return self._select_ml(feats)
+            return self._select_ml(feats, detail)
 
         # mode == "cached"
         from repro.tuning import kernel_tune
@@ -133,10 +150,21 @@ class FormatPolicy:
                 # the pinned (backend, cfg) was measured under a different
                 # kernel-execution mode (interp vs native): never replay it —
                 # re-derive the pin from this mode's kernel records instead.
-                kb, cfg = self._kernel_decision(fmt, feats, op=op, ncols=ncols)
+                if detail is not None:
+                    detail["cache"] = ("hit (stale backend tag — kernel pin "
+                                       "re-derived for this mode)")
+                kb, cfg = self._kernel_decision(fmt, feats, op=op, ncols=ncols,
+                                                detail=detail)
+            elif detail is not None:
+                detail["cache"] = "hit"
             return TuneReport(fmt, {}, "cached", backend=kb, cfg=cfg)
-        rep = self._select_ml(feats)
-        kb, cfg = self._kernel_decision(rep.best, feats, op=op, ncols=ncols)
+        if detail is not None:
+            detail["cache"] = ("miss" if hit is None
+                               else "stale (cached pick left the candidate "
+                                    "set) — reselected")
+        rep = self._select_ml(feats, detail)
+        kb, cfg = self._kernel_decision(rep.best, feats, op=op, ncols=ncols,
+                                        detail=detail)
         self.cache.put_decision(key, rep.best, kb, cfg,
                                 tag=kernel_tune.backend_tag() if kb else None)
         return TuneReport(rep.best, rep.times, f"cached-miss:{rep.mode}",
@@ -162,8 +190,17 @@ class FormatPolicy:
         nparts = int(jax.tree_util.tree_leaves(A)[0].shape[0])
         if _trace.mode() != "off":
             with _trace.span("select.batch", mode=self.mode, parts=nparts):
-                return self._select_batch(A, x, nparts)
-        return self._select_batch(A, x, nparts)
+                ids = self._select_batch(A, x, nparts)
+        else:
+            ids = self._select_batch(A, x, nparts)
+        if _ledger.enabled():
+            counts: dict = {}
+            for i in ids:
+                name = self.candidates[int(i)].name
+                counts[name] = counts.get(name, 0) + 1
+            _ledger.record("format.select_batch", mode=self.mode,
+                           parts=nparts, chosen_counts=counts)
+        return ids
 
     def _select_batch(self, A, x, nparts: int) -> np.ndarray:
         if self.mode == "profile":
@@ -222,6 +259,7 @@ class FormatPolicy:
         if fmt is None:
             fmt = self.select(A, x=x).best
         fmt = Format(fmt)
+        geometry_source = "caller hints" if hints else None
         if fmt == Format.SELL and "c" not in hints and "sigma" not in hints:
             from repro.tuning import kernel_tune
             rec = kernel_tune.best_config_for(
@@ -230,10 +268,17 @@ class FormatPolicy:
             if rec is not None and "c" in rec.cfg:
                 hints = dict(hints, c=int(rec.cfg["c"]),
                              sigma=int(rec.cfg.get("sigma", 8 * rec.cfg["c"])))
+                geometry_source = "tuned kernel record"
+        if _ledger.enabled():
+            _ledger.record("plan.switch", fmt=fmt.name,
+                           hints={k: v for k, v in hints.items()
+                                  if isinstance(v, (int, float, str, bool))},
+                           geometry_source=geometry_source)
         return _plan_switch(A, fmt, **hints)
 
     def _kernel_decision(self, fmt: Format, feats: PatternFeatures,
-                         op: str = "spmv", ncols: Optional[int] = None):
+                         op: str = "spmv", ncols: Optional[int] = None,
+                         detail: Optional[dict] = None):
         """(backend, cfg) to pin alongside a format pick: the tuned Pallas
         tile config for the pattern's (shape bucket[, rhs-width bucket])
         when one is cached AND measured faster than ref; (None, None)
@@ -249,18 +294,57 @@ class FormatPolicy:
         rec = kernel_tune.best_config_for(Format(fmt), feats.m, feats.n,
                                           max(1, feats.nnz), op=op,
                                           ncols=ncols, cache=self.cache)
+        if detail is not None and rec is not None:
+            detail["kernel"] = _kernel_dict(rec)
         if rec is not None and rec.speedup >= 1.0:
             return "pallas", dict(rec.cfg)
+        if detail is not None:
+            detail["kernel_veto"] = (
+                f"cached kernel measured {rec.speedup:.2f}x vs ref (< 1.0): "
+                "Pallas pin refused" if rec is not None
+                else "no tuned kernel record for this "
+                     "(format, shape bucket, op) — route stays auto/ref")
         return None, None
 
-    def _select_ml(self, feats: PatternFeatures) -> TuneReport:
+    def _select_ml(self, feats: PatternFeatures,
+                   detail: Optional[dict] = None) -> TuneReport:
         tree = self.tree
         if tree is not None:
-            fmt = Format(tree.predict_one(feats.vector()))
+            vec = feats.vector()
+            fmt = Format(tree.predict_one(vec))
+            if detail is not None:
+                path = tree.decision_path(vec)
+                for step in path:
+                    if step.get("leaf"):
+                        step["predict_name"] = Format(step["predict"]).name
+                detail["tree_path"] = path
             if fmt in self.candidates:
                 return TuneReport(fmt, {}, "ml")
+            if detail is not None:
+                detail["tree_rejected"] = (f"{fmt.name} outside the candidate "
+                                           "set — analytic fallback")
         # no tree shipped, or it predicts a format outside the candidate set
-        return analytic_select(feats.to_stats(), candidates=self.candidates)
+        rep = analytic_select(feats.to_stats(), candidates=self.candidates)
+        _fill_scores(detail, rep)
+        return rep
+
+
+def _fill_features(detail: Optional[dict], feats: PatternFeatures) -> None:
+    if detail is not None:
+        detail["features"] = {n: float(v) for n, v in
+                              zip(FEATURE_NAMES, feats.vector())}
+
+
+def _fill_scores(detail: Optional[dict], rep: TuneReport) -> None:
+    if detail is not None and rep.times:
+        detail["scores"] = {Format(f).name: float(t)
+                            for f, t in rep.times.items()}
+
+
+def _kernel_dict(rec) -> dict:
+    return {"fmt": rec.fmt, "op": rec.op, "cfg": dict(rec.cfg),
+            "kernel_us": float(rec.kernel_us), "ref_us": float(rec.ref_us),
+            "speedup": float(rec.speedup)}
 
 
 def _op_ctx(op: str, ncols: Optional[int]) -> str:

@@ -127,6 +127,30 @@ class DecisionTree:
         X = np.asarray(X, np.float64)
         return np.array([self.predict_one(row) for row in X], np.int64)
 
+    def decision_path(self, x) -> list:
+        """The node-by-node route ``predict_one(x)`` takes, as JSON-ready
+        step dicts — the decision ledger's explanation of a tree pick.
+
+        Internal-node steps carry the feature name, the sample's value,
+        the threshold, and which side it went; the final step is the leaf
+        with its predicted class (``predict``, an int ``Format`` value).
+        """
+        x = np.asarray(x, np.float64)
+        path = []
+        i = 0
+        while self.feature[i] >= 0:
+            f = int(self.feature[i])
+            name = (self.feature_names[f]
+                    if f < len(self.feature_names) else f"f{f}")
+            v, thr = float(x[f]), float(self.thresh[i])
+            went = "left" if v <= thr else "right"
+            path.append({"node": i, "feature": name, "value": v,
+                         "thresh": thr, "went": went})
+            i = int(self.left[i] if v <= thr else self.right[i])
+        path.append({"node": i, "leaf": True,
+                     "predict": int(self.classes_[self.value[i]])})
+        return path
+
     def score(self, X, y) -> float:
         return float(np.mean(self.predict(X) == np.asarray(y, np.int64)))
 

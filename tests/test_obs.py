@@ -1,7 +1,9 @@
-"""repro.obs: tracer, metrics, report, provenance, solver history."""
+"""repro.obs: tracer, metrics, ledger, report, provenance, solver history."""
+import collections
 import json
 import os
 import sys
+import warnings
 
 import numpy as np
 import pytest
@@ -13,7 +15,7 @@ from repro.core import Format, hpcg
 from repro.core.convert import convert, planned_pulls_scope
 from repro.core.ops import spmv
 from repro.core.solvers import cg, cg_fixed_iters, pcg
-from repro.obs import metrics, trace
+from repro.obs import explain, ledger, metrics, trace
 from repro.obs import report
 from repro.obs.provenance import env_info
 
@@ -144,6 +146,82 @@ def test_metrics_scope_is_order_independent():
     metrics.reset(["t.scope"])
 
 
+def test_quantile_vs_numpy_oracle():
+    """Bucket-estimated p50/p95/p99 must land within the 1-2-5 series'
+    resolution (~±25%) of numpy's exact quantiles on a skewed sample."""
+    metrics.reset(["t.q"])
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=5.0, sigma=1.5, size=4000)
+    for v in vals:
+        metrics.observe("t.q", v)
+    for q in (0.5, 0.95, 0.99):
+        est = metrics.quantile("t.q", q)
+        ref = float(np.quantile(vals, q))
+        assert abs(est - ref) / ref < 0.25, (q, est, ref)
+    qs = metrics.quantiles("t.q")
+    assert set(qs) == {"p50", "p95", "p99"}
+    assert qs["p50"] <= qs["p95"] <= qs["p99"]
+    metrics.reset(["t.q"])
+
+
+def test_quantile_edge_cases():
+    metrics.reset(["t.single", "t.empty"])
+    assert metrics.quantile("t.empty", 0.5) is None  # never observed
+    metrics.observe("t.single", 42.0)
+    # single observation: min==max clamping makes every quantile exact
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert metrics.quantile("t.single", q) == pytest.approx(42.0)
+    with pytest.raises(ValueError):
+        metrics.quantile("t.single", 1.5)
+    metrics.reset(["t.single"])
+
+
+def test_define_histogram_and_gauges():
+    metrics.reset(["t.custom", "t.gauge"])
+    metrics.define_histogram("t.custom", [1.0, 2.0, 4.0])
+    for v in (0.5, 1.5, 3.0, 8.0):
+        metrics.observe("t.custom", v)
+    assert metrics.quantile("t.custom", 0.5) == pytest.approx(1.75, rel=0.3)
+    with pytest.raises(ValueError):  # re-binning live counts is impossible
+        metrics.define_histogram("t.custom", [10.0])
+    metrics.set_gauge("t.gauge", 3)
+    metrics.set_gauge("t.gauge", 7)  # last write wins
+    assert metrics.gauge("t.gauge") == 7
+    snap = metrics.snapshot()
+    assert snap["gauges"]["t.gauge"] == 7
+    json.dumps(snap)
+    metrics.reset(["t.custom", "t.gauge"])
+    assert metrics.gauge("t.gauge", default=-1) == -1
+
+
+def test_trace_ring_drop_counter_and_warn_once(tmp_path, monkeypatch):
+    """A wrapped full-mode ring counts drops in trace.dropped_events and
+    export_chrome warns exactly once per collection."""
+    monkeypatch.setattr(trace, "RING_CAPACITY", 8)
+    with metrics.scope() as s:
+        with trace.tracing("full"):
+            trace.clear()
+            for i in range(12):
+                trace.event("kernel.route", i=i)
+            assert trace.dropped() == 4
+            assert s.delta("trace.dropped_events") == 4
+            assert len(trace.events()) == 8
+            # newest events win: the first 4 are gone
+            assert [e["args"]["i"] for e in trace.events()] == list(range(4, 12))
+            with pytest.warns(RuntimeWarning, match="truncated"):
+                trace.export_chrome(str(tmp_path / "t1.json"))
+            with warnings.catch_warnings():
+                warnings.simplefilter("error")  # second export: silent
+                trace.export_chrome(str(tmp_path / "t2.json"))
+            doc = json.load(open(tmp_path / "t1.json"))
+            assert doc["otherData"]["dropped_events"] == 4
+            trace.clear()  # re-arms the warning
+            trace.event("kernel.route", i=0)
+            with warnings.catch_warnings():
+                warnings.simplefilter("error")  # no drops -> no warning
+                trace.export_chrome(str(tmp_path / "t3.json"))
+
+
 def test_planned_pulls_scope_counts_only_inside():
     A = jnp.zeros((4, 4)).at[0, 0].set(1.0)
     from repro.core.formats import Dense
@@ -235,6 +313,134 @@ def test_padding_waste_histograms():
     assert snap["ell.padding_waste"]["count"] == 1
     assert 0.0 <= snap["ell.padding_waste"]["max"] <= 1.0
     assert snap["hyb.padding_waste"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Decision ledger + explain
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def _ledger_on():
+    ledger.set_enabled(True)
+    ledger.clear()
+    yield
+    ledger.clear()
+
+
+def test_ledger_ring_drops_and_dump_roundtrip(tmp_path, monkeypatch, _ledger_on):
+    monkeypatch.setattr(ledger, "CAPACITY", 4)
+    monkeypatch.setattr(ledger, "_RING", collections.deque(maxlen=4))
+    for i in range(6):
+        ledger.record("kernel.route", i=i)
+    recs = ledger.records()
+    assert len(recs) == 4
+    assert [r["i"] for r in recs] == [2, 3, 4, 5]  # newest win
+    assert ledger.dropped() == 2
+    seqs = [r["seq"] for r in recs]
+    assert seqs == sorted(seqs)
+    path = ledger.dump_json(str(tmp_path / "led.json"))
+    doc = ledger.load_json(path)
+    assert len(doc["records"]) == 4 and doc["dropped"] == 2
+    # seq stays monotonic across clear(): dumps never alias
+    ledger.clear()
+    ledger.record("kernel.route", i=99)
+    assert ledger.records()[0]["seq"] > seqs[-1]
+    with open(tmp_path / "bad.json", "w") as f:
+        json.dump({"nope": 1}, f)
+    with pytest.raises(ValueError):
+        ledger.load_json(str(tmp_path / "bad.json"))
+
+
+def test_ledger_disabled_records_nothing(_ledger_on):
+    ledger.set_enabled(False)
+    ledger.record("format.select", chosen="CSR")
+    assert ledger.records() == []
+    ledger.set_enabled(True)
+
+
+def test_policy_select_emits_explainable_records(tmp_path, _ledger_on):
+    """A cached-mode selection leaves a format.select record carrying the
+    feature vector, the CART path (or analytic scores), the cache
+    hit/miss, and the kernel veto reason; the second select is a hit."""
+    from repro.core import random_coo
+    from repro.tuning.cache import SelectionCache
+    from repro.tuning.policy import FormatPolicy
+
+    C = random_coo(0, (64, 64), 0.1)
+    policy = FormatPolicy("cached", cache=SelectionCache(
+        str(tmp_path / "sel.json")))
+    policy.select(C)
+    policy.select(C)
+    recs = ledger.records(kind="format.select")
+    assert len(recs) == 2
+    miss, hit = recs
+    assert miss["cache"] == "miss" and hit["cache"] == "hit"
+    assert miss["chosen"] in Format.__members__
+    assert set(miss["features"]) >= {"log_m", "row_cv", "ell_efficiency"}
+    assert "tree_path" in miss or "scores" in miss
+    if "tree_path" in miss:
+        leaf = miss["tree_path"][-1]
+        assert leaf["leaf"] and leaf["predict_name"] in Format.__members__
+    # empty kernel cache: the pin must carry its veto reason
+    assert "no tuned kernel record" in miss["kernel_veto"]
+    text = explain.render(recs)
+    assert "cache: miss" in text and "cache: hit" in text
+    if "tree_path" in miss:
+        assert "CART path" in text and "leaf[" in text
+
+
+def test_plan_for_records_sell_geometry_source(tmp_path, _ledger_on):
+    from benchmarks.bench_formats import powerlaw_coo
+    from repro.tuning import kernel_tune
+    from repro.tuning.cache import SelectionCache
+    from repro.tuning.policy import FormatPolicy
+
+    C = powerlaw_coo(3, 512)
+    cache = SelectionCache(str(tmp_path / "k.json"))
+    A = convert(C, Format.SELL)
+    kernel_tune.tune_kernel(A, cache=cache,
+                            grid=kernel_tune.default_grid(A, smoke=True),
+                            iters=1, inner=1)
+    policy = FormatPolicy("cached", cache=cache)
+    ledger.clear()
+    policy.plan_for(C, fmt=Format.SELL)
+    recs = ledger.records(kind="plan.switch")
+    assert len(recs) == 1
+    assert recs[0]["fmt"] == "SELL"
+    # the tuned record's (c, sigma) seeded the plan and said so
+    assert recs[0]["geometry_source"] == "tuned kernel record"
+    assert "c" in recs[0]["hints"] and "sigma" in recs[0]["hints"]
+    assert "SELL" in explain.render(recs)
+
+
+def test_kernel_route_ledger_reasons(tmp_path, _ledger_on):
+    from repro.core import random_coo
+    from repro.core.ops import kernel_route
+    from repro.tuning.cache import SelectionCache
+
+    A = convert(random_coo(1, (64, 64), 0.1), Format.CSR)
+    empty = SelectionCache(str(tmp_path / "empty.json"))
+    route, _ = kernel_route(A, cache=empty)
+    assert route == "ref"
+    recs = ledger.records(kind="kernel.route")
+    assert len(recs) == 1
+    assert recs[0]["route"] == "ref"
+    assert "no tuned record" in recs[0]["reason"]
+    assert recs[0]["bucket"].startswith("kernel:")
+    text = explain.render(recs)
+    assert "reason:" in text and "bucket:" in text
+
+
+def test_explain_render_kernel_record_with_sell_geometry(_ledger_on):
+    rec = {"seq": 1, "ts": 0.0, "kind": "kernel.route", "op": "spmv",
+           "fmt": "SELL", "route": "pallas",
+           "kernel": {"fmt": "SELL", "op": "spmv",
+                      "cfg": {"c": 32, "sigma": 256},
+                      "kernel_us": 120.0, "ref_us": 300.0, "speedup": 2.5}}
+    text = explain.render_record(rec)
+    assert "c=32" in text and "sigma=256" in text
+    assert "2.50x" in text
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,211 @@
+"""repro.obs.regress: tolerance classes, gate exit codes, trajectory store.
+
+The load-bearing acceptance flows: the same artifacts compared against
+their own bless exit 0; an injected 2x slowdown exits nonzero and the
+report names the row; a row missing from the baseline is informational,
+never a failure; a baseline from a different environment downgrades
+timing comparisons instead of failing them.
+"""
+import json
+import os
+
+import pytest
+
+from repro.obs import regress
+
+ENV = {"backend": "cpu", "device_kind": "cpu", "interpret_mode": True}
+OTHER_ENV = {"backend": "tpu", "device_kind": "TPU v4", "interpret_mode": False}
+
+
+def _rows():
+    return [
+        {"name": "kernel_tuned_csr", "us_per_call": 400.0,
+         "derived": "cfg=tk256/tm128;ref_us=700;speedup_vs_ref=1.75"},
+        {"name": "serve_sparse_mlp_b8", "us_per_call": 50.0,
+         "derived": "tok_per_s=20000.0;fmt_up=CSR;fmt_down=ELL"},
+        {"name": "convert_coo_to_csr", "us_per_call": 123.0, "derived": ""},
+        {"name": "serve_decision_b1", "us_per_call": 0.0,
+         "derived": "fmt=CSR;backend=auto"},
+    ]
+
+
+def _write_artifact(d, rows, env=ENV):
+    path = os.path.join(str(d), "BENCH_spmv.json")
+    with open(path, "w") as f:
+        json.dump({"meta": {"env": env}, "rows": rows}, f)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Row classification
+# ---------------------------------------------------------------------------
+
+
+def test_classify_tolerance_classes():
+    speedup, throughput, time_, info = _rows()
+    assert regress.classify(speedup) == ("speedup", 1.75)
+    assert regress.classify(throughput) == ("throughput", 20000.0)
+    assert regress.classify(time_) == ("time", 123.0)
+    assert regress.classify(info) == ("info", 0.0)
+
+
+def test_compare_row_bands():
+    base = {"us_per_call": 100.0, "derived": ""}
+    # inside the wide raw-time band: ok
+    assert regress.compare_row("r", base,
+                               {"us_per_call": 160.0, "derived": ""}
+                               )["status"] == "ok"
+    # beyond baseline * 1.75: regression
+    assert regress.compare_row("r", base,
+                               {"us_per_call": 180.0, "derived": ""}
+                               )["status"] == "regression"
+    # speedup rows get the tighter band
+    b = {"us_per_call": 10.0, "derived": "speedup_vs_ref=2.0"}
+    assert regress.compare_row("r", b,
+                               {"us_per_call": 10.0,
+                                "derived": "speedup_vs_ref=1.5"}
+                               )["status"] == "ok"
+    f = regress.compare_row("r", b, {"us_per_call": 10.0,
+                                     "derived": "speedup_vs_ref=1.0"})
+    assert f["status"] == "regression"
+
+
+def test_win_flip_rule_bites_inside_relative_band():
+    # 1.4x -> 0.85x is only a 39% relative drop (inside the 45% band) but
+    # flips a clear win to a clear loss — must regress.
+    base = {"us_per_call": 10.0, "derived": "speedup_vs_ref=1.40"}
+    cur = {"us_per_call": 10.0, "derived": "speedup_vs_ref=0.85"}
+    f = regress.compare_row("r", base, cur)
+    assert f["status"] == "regression"
+    assert "flipped" in f["note"]
+
+
+def test_missing_and_new_rows_are_informational():
+    f = regress.compare_row("gone", {"us_per_call": 5.0, "derived": ""}, None)
+    assert f["status"] == "missing"
+    f = regress.compare_row("born", None, {"us_per_call": 5.0, "derived": ""})
+    assert f["status"] == "new"
+    # decision rows never regress, but a changed decision is noted
+    f = regress.compare_row("d", {"us_per_call": 0.0, "derived": "fmt=CSR"},
+                            {"us_per_call": 0.0, "derived": "fmt=ELL"})
+    assert f["status"] == "info"
+    assert "decision changed" in f["note"]
+
+
+# ---------------------------------------------------------------------------
+# Gate CLI flows (the CI acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+def test_bless_then_identical_compare_exits_zero(tmp_path, capsys):
+    _write_artifact(tmp_path, _rows())
+    baseline = str(tmp_path / "baseline.json")
+    assert regress.main(["--bless", "--json-dir", str(tmp_path),
+                         "--baseline", baseline]) == 0
+    assert regress.main(["--json-dir", str(tmp_path),
+                         "--baseline", baseline]) == 0
+    out = capsys.readouterr().out
+    assert "0 regression(s)" in out
+
+
+def test_injected_slowdown_exits_nonzero_and_names_row(tmp_path, capsys):
+    _write_artifact(tmp_path, _rows())
+    baseline = str(tmp_path / "baseline.json")
+    regress.main(["--bless", "--json-dir", str(tmp_path),
+                  "--baseline", baseline])
+    report = str(tmp_path / "report.md")
+    rc = regress.main(["--json-dir", str(tmp_path), "--baseline", baseline,
+                       "--inject-slowdown", "kernel_tuned_csr:2.0",
+                       "--report", report])
+    assert rc == 1
+    text = open(report).read()
+    assert "kernel_tuned_csr" in text
+    assert "Regressions" in text
+    # the injected factor halves the speedup AND doubles the raw time
+    err = capsys.readouterr().err
+    assert "kernel_tuned_csr" in err
+
+
+def test_missing_baseline_row_is_informational_exit_zero(tmp_path):
+    _write_artifact(tmp_path, _rows()[:2])
+    baseline = str(tmp_path / "baseline.json")
+    regress.main(["--bless", "--json-dir", str(tmp_path),
+                  "--baseline", baseline])
+    # new rows appear that the baseline has never seen
+    _write_artifact(tmp_path, _rows() + [
+        {"name": "brand_new_row", "us_per_call": 9.0, "derived": ""}])
+    assert regress.main(["--json-dir", str(tmp_path),
+                         "--baseline", baseline]) == 0
+    findings = regress.compare(regress.load_baseline(baseline),
+                               json_dir=str(tmp_path))
+    by_name = {f["name"]: f for f in findings}
+    assert by_name["brand_new_row"]["status"] == "new"
+
+
+def test_env_mismatch_downgrades_to_informational(tmp_path):
+    _write_artifact(tmp_path, _rows(), env=OTHER_ENV)
+    baseline = str(tmp_path / "baseline.json")
+    regress.main(["--bless", "--json-dir", str(tmp_path),
+                  "--baseline", baseline])
+    # same rows, 10x slower, but from a different device: not enforced
+    slow = [dict(r, us_per_call=r["us_per_call"] * 10) for r in _rows()]
+    for r in slow:
+        r["derived"] = r["derived"].replace("speedup_vs_ref=1.75",
+                                            "speedup_vs_ref=0.2")
+    _write_artifact(tmp_path, slow, env=ENV)
+    assert regress.main(["--json-dir", str(tmp_path),
+                         "--baseline", baseline]) == 0
+    findings = regress.compare(regress.load_baseline(baseline),
+                               json_dir=str(tmp_path))
+    assert all(f["status"] != "regression" for f in findings)
+    assert any("env mismatch" in str(f.get("note")) for f in findings)
+
+
+def test_no_baseline_is_not_a_failure(tmp_path):
+    _write_artifact(tmp_path, _rows())
+    assert regress.main(["--json-dir", str(tmp_path), "--baseline",
+                         str(tmp_path / "nope.json")]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Trajectory store
+# ---------------------------------------------------------------------------
+
+
+def test_history_append_and_load_roundtrip(tmp_path):
+    hdir = str(tmp_path / "history")
+    meta = {"env": {"git_rev": "abc123", **ENV}}
+    rows = [("kernel_tuned_csr", 400.0, "speedup_vs_ref=1.75"),
+            ("convert_coo_to_csr", 123.0, "")]
+    regress.append_history("BENCH_spmv", rows, meta, history_dir=hdir)
+    regress.append_history("BENCH_serve",
+                           [("serve_decode_b8", 50.0, "tok_per_s=20000.0")],
+                           meta, history_dir=hdir)
+    entries = regress.load_history(hdir)
+    assert [e["artifact"] for e in entries] == ["BENCH_spmv", "BENCH_serve"]
+    assert entries[0]["git_rev"] == "abc123"
+    assert entries[0]["env"]["device_kind"] == "cpu"
+    assert entries[0]["rows"][0]["name"] == "kernel_tuned_csr"
+    # a corrupt line is skipped, not fatal
+    with open(os.path.join(hdir, regress.HISTORY_FILE), "a") as f:
+        f.write("not json\n")
+    assert len(regress.load_history(hdir)) == 2
+    assert regress.load_history(str(tmp_path / "void")) == []
+
+
+def test_render_markdown_sections():
+    findings = [
+        {"name": "bad", "artifact": "BENCH_spmv", "cls": "speedup",
+         "status": "regression", "baseline": 2.0, "current": 1.0,
+         "ratio": 0.5, "note": "1.00 vs baseline 2.00 (x0.50)"},
+        {"name": "fine", "artifact": "BENCH_spmv", "cls": "time",
+         "status": "ok", "baseline": 10.0, "current": 11.0, "ratio": 1.1,
+         "note": ""},
+        {"name": "fresh", "artifact": "BENCH_serve", "cls": "time",
+         "status": "new", "current": 5.0, "note": "no baseline row"},
+    ]
+    text = regress.render_markdown(findings, "results/baseline.json")
+    assert "1 regression(s)" in text
+    assert "`bad`" in text and "Regressions" in text
+    assert "`fresh`" in text  # surfaced under notable
+    assert "`fine`" not in text  # ok rows stay out of the tables

@@ -132,14 +132,20 @@ def test_ml_agrees_with_profile_on_holdout():
     hits, detail = 0, []
     for A, fam in zip(mats, fams):
         x = jnp.ones((A.shape[1],), A.dtype)
+        # best-of-two profiling passes: a single scheduler spike on one
+        # format's measurement must not crown (or dethrone) a winner
         rep = profile_select(A, x, candidates=DEFAULT_CANDIDATES, iters=8)
-        best_t = rep.times[rep.best]
+        rep2 = profile_select(A, x, candidates=DEFAULT_CANDIDATES, iters=8)
+        times = {f: min(t, rep2.times.get(f, t))
+                 for f, t in rep.times.items()}
+        winner = min(times, key=times.get)
+        best_t = times[winner]
         pick = policy.select(A).best
-        pick_t = rep.times.get(pick)
+        pick_t = times.get(pick)
         if pick_t is not None and pick_t <= best_t * (1 + tie_tol):
             hits += 1
         else:
-            detail.append((fam, rep.best.name, pick.name,
+            detail.append((fam, winner.name, pick.name,
                            None if pick_t is None else
                            round(pick_t / best_t, 2)))
     agreement = hits / len(mats)
